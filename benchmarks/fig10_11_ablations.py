@@ -1,0 +1,65 @@
+"""Figs. 10-11 — ablations.
+
+Fig 10: HABS vs fixed batch sizes (b = 8, 16, 32), L_c = 8.
+Fig 11: HAMS vs fixed split points (L_c = 2, 4, 6), b = 16.
+Both under IID and non-IID.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_sim, emit, save_csv, OUT_DIR
+from repro.core import baselines
+
+
+def main(quick: bool = False):
+    rounds = 30 if quick else 60
+    n_clients = 4 if quick else 6
+    rows = []
+    for iid in (True, False):
+        tag = "iid" if iid else "noniid"
+        # ---- Fig 10: BS ablation (cuts fixed) --------------------------
+        for scheme in (["habs", 8, 16] if quick
+                       else ["habs", 8, 16, 32]):
+            sim, opt = make_sim(n_clients=n_clients, iid=iid, seed=2)
+            l_c = 4
+
+            def policy(s, rng, _s=scheme):
+                cuts = np.full(s.n, l_c)
+                if _s == "habs":
+                    return baselines.habs(opt, cuts), cuts
+                return np.full(s.n, int(_s)), cuts
+
+            res = sim.run(policy, rounds=rounds,
+                          eval_every=max(5, rounds // 8))
+            name = scheme if scheme == "habs" else f"fixed_b{scheme}"
+            emit(f"fig10_{tag}_{name}", 0.0,
+                 f"final_acc={res.test_acc[-1]:.4f};"
+                 f"converged_time={res.converged_time():.2f}s")
+            rows.append(["fig10", tag, name, res.test_acc[-1],
+                         res.converged_time()])
+        # ---- Fig 11: MS ablation (b fixed = 16) ------------------------
+        for scheme in (["hams", 2, 6] if quick else ["hams", 2, 4, 6]):
+            sim, opt = make_sim(n_clients=n_clients, iid=iid, seed=2)
+
+            def policy(s, rng, _s=scheme):
+                b = np.full(s.n, 16)
+                if _s == "hams":
+                    return b, baselines.hams(opt, b)
+                return b, np.full(s.n, int(_s))
+
+            res = sim.run(policy, rounds=rounds,
+                          eval_every=max(5, rounds // 8))
+            name = scheme if scheme == "hams" else f"fixed_Lc{scheme}"
+            emit(f"fig11_{tag}_{name}", 0.0,
+                 f"final_acc={res.test_acc[-1]:.4f};"
+                 f"converged_time={res.converged_time():.2f}s")
+            rows.append(["fig11", tag, name, res.test_acc[-1],
+                         res.converged_time()])
+    save_csv(f"{OUT_DIR}/fig10_11.csv",
+             ["figure", "setting", "scheme", "final_acc",
+              "converged_time_s"], rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig. 2 — impact of batch size on convergence and per-round latency.
+
+(a) test accuracy vs rounds for fixed b in {8, 16, 32} (reduced model,
+    non-IID, L_c = 8, I = 15 — the paper's setting);
+(b) per-round training latency vs b on the FULL VGG-16 profile (analytic,
+    exactly Eqns 28-40).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (make_sim, full_profile, emit, save_csv,
+                               OUT_DIR)
+from repro.config import SFLConfig
+from repro.core.latency import LatencyModel, sample_devices
+
+
+def main(quick: bool = False):
+    rounds = 30 if quick else 60
+    rows = []
+    # (a) accuracy vs rounds for fixed batch sizes
+    for b in (8, 16, 32):
+        sim, opt = make_sim(n_clients=4 if quick else 8, iid=False,
+                            agg_interval=15)
+        l_c = 4
+
+        def policy(s, rng, _b=b):
+            return np.full(s.n, _b), np.full(s.n, l_c)
+
+        t0 = time.time()
+        res = sim.run(policy, rounds=rounds, eval_every=max(5, rounds // 8))
+        us = (time.time() - t0) / rounds * 1e6
+        emit(f"fig2a_acc_b{b}", us,
+             f"final_acc={res.test_acc[-1]:.4f};clock={res.clock[-1]:.2f}s")
+        for r, a, c in zip(res.rounds, res.test_acc, res.clock):
+            rows.append([f"b={b}", r, a, c])
+    save_csv(f"{OUT_DIR}/fig2a.csv", ["series", "round", "acc", "clock"],
+             rows)
+
+    # (b) per-round latency vs b — full VGG-16 profile, Table-I devices
+    prof = full_profile("vgg16-cifar")
+    rng = np.random.default_rng(0)
+    devs = sample_devices(20, rng)
+    lat = LatencyModel(prof, devs, SFLConfig())
+    rows_b = []
+    for b in (4, 8, 16, 32, 64):
+        t = lat.t_split(np.full(20, b), np.full(20, 8))
+        rows_b.append([b, t])
+        emit(f"fig2b_latency_b{b}", t * 1e6, f"t_split={t:.4f}s")
+    save_csv(f"{OUT_DIR}/fig2b.csv", ["b", "t_split_s"], rows_b)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fig. 3 — impact of the model split point.
+
+(b) per-cut computing and communication overhead of SFL on the FULL
+    VGG-16 profile (exact per-layer rho/psi/delta arrays);
+(a) test accuracy vs rounds for different L_c (reduced model).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import make_sim, full_profile, emit, save_csv, OUT_DIR
+
+
+def main(quick: bool = False):
+    # (b) analytic overheads per split point — the paper's trade-off plot
+    prof = full_profile("vgg16-cifar")
+    rows = []
+    for j in range(1, prof.n_layers + 1):
+        client_flops = prof.rho[j - 1] + prof.bwd[j - 1]
+        server_flops = (prof.rho[-1] - prof.rho[j - 1]
+                        + prof.bwd[-1] - prof.bwd[j - 1])
+        comm_bits = prof.psi[j - 1] + prof.chi[j - 1]
+        rows.append([j, client_flops, server_flops, comm_bits,
+                     prof.delta[j - 1]])
+    save_csv(f"{OUT_DIR}/fig3b.csv",
+             ["cut", "client_flops", "server_flops", "act_bits_per_sample",
+              "submodel_bits"], rows)
+    emit("fig3b_overheads", 0.0, f"cuts={prof.n_layers}")
+
+    # (a) accuracy vs rounds for different cut depths (b=16, I=15)
+    rounds = 30 if quick else 60
+    rows_a = []
+    for l_c in (2, 4, 6):
+        sim, opt = make_sim(n_clients=4 if quick else 8, iid=False,
+                            agg_interval=15)
+
+        def policy(s, rng, _c=l_c):
+            return np.full(s.n, 16), np.full(s.n, _c)
+
+        t0 = time.time()
+        res = sim.run(policy, rounds=rounds, eval_every=max(5, rounds // 8))
+        us = (time.time() - t0) / rounds * 1e6
+        emit(f"fig3a_acc_Lc{l_c}", us, f"final_acc={res.test_acc[-1]:.4f}")
+        for r, a in zip(res.rounds, res.test_acc):
+            rows_a.append([f"Lc={l_c}", r, a])
+    save_csv(f"{OUT_DIR}/fig3a.csv", ["series", "round", "acc"], rows_a)
+
+
+if __name__ == "__main__":
+    main()

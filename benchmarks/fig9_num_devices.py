@@ -1,0 +1,33 @@
+"""Fig. 9 — converged time vs number of edge devices (IID and non-IID use
+the same latency objective; the accuracy difference is covered by fig5)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (full_profile, emit, save_csv, POLICIES,
+                               OUT_DIR, robust_theta)
+from repro.config import SFLConfig
+from repro.core.bcd import HASFLOptimizer
+from repro.core import baselines
+from repro.core.latency import sample_devices
+
+
+def main(quick: bool = False):
+    prof = full_profile("vgg16-cifar")
+    rng = np.random.default_rng(0)
+    rows = []
+    ns = (10, 20, 30) if quick else (10, 15, 20, 25, 30)
+    for n in ns:
+        devs = sample_devices(n, np.random.default_rng(2))
+        opt = HASFLOptimizer(prof, devs, SFLConfig(n_devices=n))
+        for name in POLICIES:
+            b, cuts = baselines.policy(name, opt, rng)
+            rows.append([n, name, robust_theta(opt, b, cuts)])
+    save_csv(f"{OUT_DIR}/fig9.csv", ["n_devices", "policy", "theta_s"], rows)
+    h20 = [r for r in rows if r[1] == "hasfl"]
+    emit("fig9_scaling", 0.0,
+         ";".join(f"N={r[0]}:{r[2]:.0f}s" for r in h20))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV files
+under experiments/bench/).  ``--quick`` shrinks rounds/clients for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+BENCHES = [
+    ("fig2_bs_impact", "benchmarks.fig2_bs_impact"),
+    ("fig3_ms_impact", "benchmarks.fig3_ms_impact"),
+    ("fig5_6_convergence", "benchmarks.fig5_6_convergence"),
+    ("fig7_8_resources", "benchmarks.fig7_8_resources"),
+    ("fig9_num_devices", "benchmarks.fig9_num_devices"),
+    ("fig10_11_ablations", "benchmarks.fig10_11_ablations"),
+    ("roofline_table", "benchmarks.roofline_table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced rounds/clients (still exercises every "
+                         "figure)")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    failures = 0
+    for name, module in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"### {name}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main(quick=args.quick)
+            print(f"### {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    print(f"benchmarks complete; failures={failures}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

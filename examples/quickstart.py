@@ -1,0 +1,49 @@
+"""Quickstart: the HASFL controller + one split-training round, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.config import get_config, SFLConfig
+from repro.core.profiles import model_profile
+from repro.core.latency import sample_devices, LatencyModel
+from repro.core.bcd import HASFLOptimizer
+from repro.core.sfl import SFLEdgeSimulator
+from repro.core import baselines
+from repro.models import build_model
+from repro.data import make_cifar_like, partition_noniid_shards, ClientSampler
+
+# 1. A heterogeneous edge cluster (paper Table I) ---------------------------
+rng = np.random.default_rng(0)
+sfl = SFLConfig(n_devices=6, agg_interval=5, lr=0.05)
+devices = sample_devices(6, rng)
+
+# 2. The paper's VGG-16 profile + the joint BS/MS optimizer -----------------
+profile = model_profile(get_config("vgg16-cifar"))
+opt = HASFLOptimizer(profile, devices, sfl)
+decision = opt.solve()
+print("HASFL decision:")
+print("  batch sizes:", decision.b)
+print("  cut layers :", decision.cuts)
+print(f"  est. rounds to eps: {decision.rounds:.0f}; "
+      f"T_split={decision.t_split:.3f}s T_agg={decision.t_agg:.3f}s")
+
+# 3. Split-federated training on a CPU-sized model --------------------------
+cfg = get_config("vgg9-cifar-small")
+model = build_model(cfg)
+(xtr, ytr), (xte, yte) = make_cifar_like(10, 600, 150, 32, seed=1)
+shards = partition_noniid_shards(ytr, sfl.n_devices, rng)
+sampler = ClientSampler({"images": xtr, "labels": ytr}, shards, rng)
+sim_profile = model_profile(cfg)
+sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
+                       devices, sfl, sim_profile, seed=0)
+sim_opt = HASFLOptimizer(sim_profile, devices, sfl)
+
+
+def policy(sim_, prng):
+    return baselines.policy("hasfl", sim_opt, prng)
+
+
+res = sim.run(policy, rounds=30, eval_every=10, verbose=True)
+print(f"final accuracy {res.test_acc[-1]:.3f} after "
+      f"{res.clock[-1]:.2f} simulated seconds")

@@ -1,0 +1,16 @@
+"""Batched serving example: prefill + decode with a KV cache
+(the decode_32k / long_500k code path at CPU scale).
+
+    PYTHONPATH=src python examples/serve_batch.py --arch qwen3-1.7b
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    # thin wrapper so `examples/` stays runnable as documented
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or
+                                ["--arch", "qwen3-1.7b", "--batch", "4",
+                                 "--prompt-len", "32", "--gen", "32"])
+    serve_main()

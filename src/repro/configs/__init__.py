@@ -1,0 +1,29 @@
+"""Architecture registry: importing this package registers all configs."""
+from repro.configs import (  # noqa: F401
+    llama4_maverick_400b_a17b,
+    phi3_mini_3_8b,
+    glm4_9b,
+    whisper_medium,
+    xlstm_350m,
+    smollm_135m,
+    internvl2_1b,
+    dbrx_132b,
+    jamba_v0_1_52b,
+    qwen3_1_7b,
+    vgg16_cifar,
+    resnet18_cifar,
+)
+from repro.configs.input_shapes import input_specs, INPUT_SHAPES  # noqa: F401
+
+ASSIGNED = [
+    "llama4-maverick-400b-a17b",
+    "phi3-mini-3.8b",
+    "glm4-9b",
+    "whisper-medium",
+    "xlstm-350m",
+    "smollm-135m",
+    "internvl2-1b",
+    "dbrx-132b",
+    "jamba-v0.1-52b",
+    "qwen3-1.7b",
+]

@@ -1,0 +1,19 @@
+"""SmolLM-135M — llama-arch small dense.  [hf:HuggingFaceTB/SmolLM-135M]
+
+30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152.
+"""
+from repro.config import ModelConfig, DENSE, register
+
+CONFIG = register(ModelConfig(
+    arch_id="smollm-135m",
+    family=DENSE,
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49152,
+    head_dim=64,
+    tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M",
+))

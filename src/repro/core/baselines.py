@@ -1,0 +1,79 @@
+"""Benchmark policies from Section VII.
+
+- RBS : random batch size in [1, 64] per device per (re)configuration
+- RMS : random cut layer per device
+- RHAMS : resource-heterogeneity-aware MS heuristic [55] (CoopFL-style) —
+  picks each device's cut to balance its compute+comm time against the
+  server, with NO convergence-awareness.
+- HABS / HAMS : the paper's heterogeneity-aware BS / MS (Section VI),
+  exposed by running one sub-problem of the BCD with the other variable
+  fixed to the benchmark policy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bcd import HASFLOptimizer
+from repro.core.ms_opt import MSProblem
+
+
+def rbs(n: int, rng: np.random.Generator, max_batch: int = 64) -> np.ndarray:
+    return rng.integers(1, max_batch + 1, n)
+
+
+def rms(n: int, n_layers: int, rng: np.random.Generator) -> np.ndarray:
+    return rng.integers(1, n_layers + 1, n)
+
+
+def rhams(opt: HASFLOptimizer, b: np.ndarray) -> np.ndarray:
+    """Heuristic MS: per-device cut minimizing its own round time, ignoring
+    convergence (the [55] comparison point)."""
+    p = opt.profile
+    n = len(opt.devices)
+    cuts = np.zeros(n, int)
+    for i, dev in enumerate(opt.devices):
+        t_client = b[i] * (p.rho + p.bwd) / dev.flops
+        t_comm = b[i] * (p.psi / dev.up_bw + p.chi / dev.down_bw)
+        t_server = b[i] * ((p.rho[-1] - p.rho) + (p.bwd[-1] - p.bwd)) \
+            / opt.sfl.server_flops
+        cuts[i] = int(np.argmin(t_client + t_comm + t_server)) + 1
+    return cuts
+
+
+def habs(opt: HASFLOptimizer, cuts: np.ndarray,
+         b0=None) -> np.ndarray:
+    """Heterogeneity-aware BS only (our Proposition 1, cuts fixed)."""
+    from repro.core.bs_opt import solve_bs
+    b_ref = np.asarray(b0 if b0 is not None
+                       else np.full(len(opt.devices), 16), float)
+    prob = opt._bs_problem(np.asarray(cuts, int), b_ref)
+    return solve_bs(prob, b0=b_ref)
+
+
+def hams(opt: HASFLOptimizer, b: np.ndarray) -> np.ndarray:
+    """Heterogeneity-aware MS only (our Dinkelbach, b fixed)."""
+    ms = MSProblem(opt.profile, opt.devices, opt.sfl, opt.conv,
+                   np.asarray(b, float))
+    return ms.solve()
+
+
+def policy(name: str, opt: HASFLOptimizer, rng: np.random.Generator):
+    """Returns (b, cuts) for one reconfiguration event."""
+    n = len(opt.devices)
+    l = opt.profile.n_layers
+    name = name.lower()
+    if name == "hasfl":
+        d = opt.solve()
+        return d.b, d.cuts
+    if name == "rbs+hams":
+        b = rbs(n, rng, opt.sfl.max_batch)
+        return b, hams(opt, b)
+    if name == "habs+rms":
+        cuts = rms(n, l, rng)
+        return habs(opt, cuts), cuts
+    if name == "rbs+rms":
+        return rbs(n, rng, opt.sfl.max_batch), rms(n, l, rng)
+    if name == "rbs+rhams":
+        b = rbs(n, rng, opt.sfl.max_batch)
+        return b, rhams(opt, b)
+    raise ValueError(f"unknown policy {name!r}")

@@ -1,0 +1,346 @@
+"""The SFL/HASFL training runtime.
+
+Two execution paths share the same algorithmic semantics (Algorithm 1):
+
+1. **SFLEdgeSimulator** — the paper-faithful edge-computing simulation:
+   N heterogeneous clients, per-client batch b_i and cut c_i, server-common
+   sub-model aggregated every round (Eq. 4), client-specific sub-models
+   (client-side + server-non-common) aggregated every I rounds (Eq. 7),
+   wall-clock advanced by the Eqns (28)-(40) latency model, metrics on a
+   held-out set. Used by all paper-figure benchmarks.
+
+2. **make_hasfl_train_step** — the SPMD pod realization: client-stacked
+   prefix parameters [N, ...] sharded over the data axis, server suffix
+   2-D sharded, delayed every-I aggregation executed inside the jitted
+   step (a `jnp.where` on step % I).  This is what the multi-pod dry-run
+   lowers for the `train_4k` shape.
+
+Key correctness note (DESIGN.md §2): within a round, split execution
+computes exactly the same gradients as full-model execution — the *only*
+algorithmic deviations of SFL from centralized SGD are the aggregation
+schedules.  The simulator therefore computes per-client full-model
+gradients and applies HASFL's per-component update rules, which is
+mathematically identical to shipping activations (and is what makes the
+simulation exact rather than approximate).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, SFLConfig, DeviceProfile, CNN
+from repro.core.latency import LatencyModel
+from repro.core.profiles import LayerProfile
+from repro.core import split as SP
+from repro.models.factory import Model
+from repro.training.optim import make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# Edge simulator
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimResult:
+    rounds: List[int] = field(default_factory=list)
+    clock: List[float] = field(default_factory=list)      # simulated seconds
+    train_loss: List[float] = field(default_factory=list)
+    test_acc: List[float] = field(default_factory=list)
+    test_loss: List[float] = field(default_factory=list)
+    b_history: List[np.ndarray] = field(default_factory=list)
+    cut_history: List[np.ndarray] = field(default_factory=list)
+
+    def converged_time(self, window: int = 5, tol: float = 0.0002) -> float:
+        """Paper's criterion: accuracy improves < tol over `window` evals."""
+        acc = self.test_acc
+        for k in range(window, len(acc)):
+            if max(acc[k - window:k + 1]) - acc[k - window] < tol:
+                return self.clock[k]
+        return self.clock[-1] if self.clock else float("inf")
+
+
+class SFLEdgeSimulator:
+    def __init__(self, model: Model, sampler, test_batch: dict,
+                 devices: Sequence[DeviceProfile], sfl: SFLConfig,
+                 profile: LayerProfile, seed: int = 0):
+        self.model = model
+        self.cfg = model.cfg
+        self.sampler = sampler
+        self.test_batch = {k: jnp.asarray(v) for k, v in test_batch.items()}
+        self.devices = list(devices)
+        self.sfl = sfl
+        self.profile = profile
+        self.lat = LatencyModel(profile, devices, sfl)
+        self.n = len(devices)
+        self.rng = np.random.default_rng(seed)
+
+        params = model.init(jax.random.PRNGKey(seed))
+        units, self.rebuild = SP.to_units(self.cfg, params)
+        self.units = units
+        # per-client copies of every *cuttable* unit; shared tail managed by
+        # L_c at update time.  Memory: N copies of a small model (sim only).
+        self.client_units = [jax.tree_util.tree_map(jnp.copy, units)
+                             for _ in range(self.n)]
+
+        self._grad_fn = jax.jit(jax.value_and_grad(self._loss, has_aux=True))
+        self._eval_fn = jax.jit(self._eval)
+
+    # -- loss over unit list -------------------------------------------------
+    def _loss(self, units, batch):
+        params = self.rebuild(units)
+        return self.model.loss(params, batch)
+
+    def _eval(self, units, batch):
+        params = self.rebuild(units)
+        logits, _ = self.model.apply(params, batch)
+        labels = batch["labels"]
+        if logits.ndim == 3:
+            pred = logits.argmax(-1)
+            acc = (pred == labels).mean()
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            loss = -jnp.take_along_axis(logp, labels[..., None], -1).mean()
+        else:
+            acc = (logits.argmax(-1) == labels).mean()
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            loss = -jnp.take_along_axis(logp, labels[:, None], 1).mean()
+        return loss, acc
+
+    # -- unit-space helpers ---------------------------------------------------
+    def _unit_cuts(self, cuts_layers: np.ndarray) -> np.ndarray:
+        return np.asarray([SP.layer_cut_to_unit_cut(self.cfg, int(c))
+                           for c in cuts_layers], int)
+
+    def _client_slice(self, l_c_units: int):
+        """Unit indices belonging to the client-specific (every-I) part."""
+        if self.cfg.family == CNN:
+            return list(range(l_c_units))
+        return list(range(0, l_c_units + 1))   # embed + first l_c reps
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, policy_fn: Callable, rounds: int, eval_every: int = 10,
+            reconfigure_every: Optional[int] = None,
+            verbose: bool = False) -> SimResult:
+        """policy_fn(sim, rng) -> (b [N], cuts_layers [N])."""
+        res = SimResult()
+        clock = 0.0
+        reconf = reconfigure_every or self.sfl.agg_interval
+        b, cuts = policy_fn(self, self.rng)
+        res.b_history.append(np.asarray(b).copy())
+        res.cut_history.append(np.asarray(cuts).copy())
+        gamma = self.sfl.lr
+        n_units_total = len(self.units)
+
+        for t in range(1, rounds + 1):
+            ucuts = self._unit_cuts(np.asarray(cuts))
+            l_c_units = int(np.max(ucuts))
+            client_idx = self._client_slice(l_c_units)
+
+            # --- split-training round (a1-a5) -----------------------------
+            b_max = int(np.max(b))
+            losses = []
+            grads_all = []
+            for i in range(self.n):
+                batch = self.sampler.sample(i, int(b[i]), pad_to=b_max)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                (loss, _), g = self._grad_fn(self.client_units[i], batch)
+                losses.append(float(loss))
+                grads_all.append(g)
+
+            # server-common units (> L_c): averaged update, every round (Eq.4)
+            for u in range(n_units_total):
+                if u in client_idx:
+                    continue
+                mean_g = jax.tree_util.tree_map(
+                    lambda *gs: sum(gs) / self.n,
+                    *[grads_all[i][u] for i in range(self.n)])
+                new_common = jax.tree_util.tree_map(
+                    lambda p, g: p - gamma * g.astype(p.dtype),
+                    self.client_units[0][u], mean_g)
+                for i in range(self.n):
+                    self.client_units[i][u] = new_common
+
+            # client-specific units (<= L_c): individual updates (Eq.5-6)
+            for i in range(self.n):
+                for u in client_idx:
+                    self.client_units[i][u] = jax.tree_util.tree_map(
+                        lambda p, g: p - gamma * g.astype(p.dtype),
+                        self.client_units[i][u], grads_all[i][u])
+
+            clock += self.lat.t_split(b, cuts)
+
+            # --- client-side aggregation stage (b1-b3), every I (Eq.7) ----
+            if t % self.sfl.agg_interval == 0:
+                for u in client_idx:
+                    mean_u = jax.tree_util.tree_map(
+                        lambda *xs: sum(xs) / self.n,
+                        *[self.client_units[i][u] for i in range(self.n)])
+                    for i in range(self.n):
+                        self.client_units[i][u] = mean_u
+                clock += self.lat.t_agg(b, cuts)
+
+            # --- reconfiguration (Algorithm 1 line 23) --------------------
+            if t % reconf == 0 and t < rounds:
+                b, cuts = policy_fn(self, self.rng)
+                res.b_history.append(np.asarray(b).copy())
+                res.cut_history.append(np.asarray(cuts).copy())
+
+            # --- metrics ---------------------------------------------------
+            if t % eval_every == 0 or t == rounds:
+                agg = self._aggregate_model()
+                tl, ta = self._eval_fn(agg, self.test_batch)
+                res.rounds.append(t)
+                res.clock.append(clock)
+                res.train_loss.append(float(np.mean(losses)))
+                res.test_loss.append(float(tl))
+                res.test_acc.append(float(ta))
+                if verbose:
+                    print(f"round {t:5d} clock {clock:9.1f}s "
+                          f"loss {np.mean(losses):.4f} acc {float(ta):.4f}",
+                          flush=True)
+        return res
+
+    def _aggregate_model(self):
+        """Virtual aggregated model w̄ (analysis object, Sec. IV)."""
+        return [jax.tree_util.tree_map(lambda *xs: sum(xs) / self.n,
+                                       *[self.client_units[i][u]
+                                         for i in range(self.n)])
+                for u in range(len(self.units))]
+
+
+# ---------------------------------------------------------------------------
+# SPMD pod train step (the dry-run object)
+# ---------------------------------------------------------------------------
+
+def make_hasfl_train_step(model: Model, *, n_clients: int, cut_reps: int,
+                          agg_interval: int, optimizer_name: str = "adam",
+                          lr: float = 3e-4, optimizer_dtype: str = "float32",
+                          grad_accum: int = 1, remat: bool = True,
+                          shard_fn=None, unroll: bool = False,
+                          param_shardings=None, rep_shard_fn=None):
+    """``param_shardings``: optional ({client shardings}, {server
+    shardings}) NamedSharding trees; when given, accumulated gradients are
+    explicitly constrained to the parameter layout (the
+    optimization_barrier between microbatches blocks GSPMD propagation,
+    which otherwise leaves the big MoE grad buffers unsharded)."""
+    """Build (init_state, train_step) for the production SPMD path.
+
+    State: {"client": per-client stacked prefix [N, ...], "server": suffix,
+            "opt": optimizer state, "step": scalar}.
+    Batch: {"tokens": [N, b, S], "labels": [N, b, S], (stubs...)}.
+
+    Semantics per HASFL: server part's gradient is the client-mean (Eq. 4,
+    every step); client parts take their own gradients (Eq. 5-6) and are
+    averaged every ``agg_interval`` steps (Eq. 7) inside the step.
+    """
+    opt = make_optimizer(optimizer_name, lr, state_dtype=optimizer_dtype)
+
+    def init_state(rng):
+        params = model.init(rng)
+        client, server = SP.split_stacked(params, cut_reps)
+        client_stacked = SP.replicate_client(client, n_clients)
+        state = {"client": client_stacked, "server": server,
+                 "step": jnp.zeros((), jnp.int32)}
+        state["opt"] = opt.init({"client": client_stacked, "server": server})
+        return state
+
+    def per_client_loss(client_i, server, batch_i):
+        params = SP.merge_stacked(client_i, server)
+        loss, _ = model.loss(params, batch_i, shard_fn=shard_fn, remat=remat,
+                             unroll=unroll, rep_shard_fn=rep_shard_fn)
+        return loss
+
+    def mean_loss(client_stacked, server, batch):
+        if getattr(model, "split_loss", None) is not None:
+            # faithful split dataflow: per-client prefix, concatenated
+            # server batch (also avoids materializing per-client server
+            # gradients — see factory.split_loss docstring)
+            loss, _ = model.split_loss(
+                client_stacked, server, batch, shard_fn=shard_fn,
+                remat=remat, unroll=unroll, rep_shard_fn=rep_shard_fn)
+            return loss
+        losses = jax.vmap(per_client_loss, in_axes=(0, None, 0))(
+            client_stacked, server, batch)
+        return losses.mean()
+
+    grad_fn = jax.value_and_grad(mean_loss, argnums=(0, 1))
+
+    def train_step(state, batch):
+        client, server = state["client"], state["server"]
+
+        if grad_accum > 1:
+            # Accumulate with lax.scan: the carry (grad trees) is
+            # double-buffered by XLA, forcing sequential microbatches and
+            # bounded live memory.  (A fori_loop here made the SPMD
+            # partitioner blow up on large MoE models: >30 min compiles;
+            # python-unrolling compiled fast but XLA scheduled all
+            # microbatches' activations concurrently — scan gives both
+            # fast compiles and bounded memory.)
+            def constrain(gc_, gs_):
+                if param_shardings is None:
+                    return gc_, gs_
+                gc_ = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, gc_,
+                    param_shardings[0])
+                gs_ = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, gs_,
+                    param_shardings[1])
+                return gc_, gs_
+
+            def micro_step(carry, mb):
+                gc, gs, ls = carry
+                l, (gci, gsi) = grad_fn(client, server, mb)
+                add = lambda a, b: a + b
+                ngc = jax.tree_util.tree_map(add, gc, gci)
+                ngs = jax.tree_util.tree_map(add, gs, gsi)
+                ngc, ngs = constrain(ngc, ngs)
+                return (ngc, ngs, ls + l), None
+
+            # reshape [N, b, ...] -> [accum, N, b/accum, ...]
+            def to_micro(x):
+                n, b = x.shape[0], x.shape[1]
+                xs = x.reshape(n, grad_accum, b // grad_accum, *x.shape[2:])
+                return jnp.moveaxis(xs, 1, 0)
+
+            micro_xs = jax.tree_util.tree_map(to_micro, batch)
+            zeros_c = jax.tree_util.tree_map(jnp.zeros_like, client)
+            zeros_s = jax.tree_util.tree_map(jnp.zeros_like, server)
+            zeros_c, zeros_s = constrain(zeros_c, zeros_s)
+            (gc, gs, loss), _ = jax.lax.scan(
+                micro_step, (zeros_c, zeros_s, 0.0), micro_xs,
+                unroll=grad_accum if unroll else 1)
+            scale = 1.0 / grad_accum
+            gc = jax.tree_util.tree_map(lambda x: x * scale, gc)
+            gs = jax.tree_util.tree_map(lambda x: x * scale, gs)
+            loss = loss * scale
+        else:
+            loss, (gc, gs) = grad_fn(client, server, batch)
+
+        # mean_loss scales each client's grad by 1/N; restore per-client SGD
+        gc = jax.tree_util.tree_map(lambda x: x * n_clients, gc)
+
+        grads = {"client": gc, "server": gs}
+        params = {"client": client, "server": server}
+        new_params, new_opt = opt.update(grads, state["opt"], params,
+                                         state["step"])
+
+        # every-I aggregation of the client-stacked prefix (Eq. 7)
+        step1 = state["step"] + 1
+        do_agg = (step1 % agg_interval) == 0
+
+        def agg(tree):
+            return jax.tree_util.tree_map(
+                lambda a: jnp.where(
+                    do_agg,
+                    jnp.broadcast_to(a.mean(axis=0, keepdims=True), a.shape),
+                    a), tree)
+
+        new_client = agg(new_params["client"])
+        return {"client": new_client, "server": new_params["server"],
+                "opt": new_opt, "step": step1}, {"loss": loss}
+
+    return init_state, train_step

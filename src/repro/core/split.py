@@ -1,0 +1,123 @@
+"""Model partitioning: cut a model's parameters into client-side and
+server-side sub-models (paper Sec. III-A).
+
+Two granularities:
+
+- **unit lists** (edge simulator): a model is a list of cuttable units.
+  CNNs: one unit per conv/fc layer (exactly the paper's VGG-16 splitting).
+  Transformers: one unit per super-block repetition, plus the embedding
+  (always client-side — it touches raw data) and the head (always server).
+
+- **stacked split** (SPMD pod path): the first ``c`` repetitions of the
+  scan-stacked decoder are re-stacked per-client ``[N, c, ...]``; the rest
+  stay a single server copy.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, CNN
+from repro.models.transformer import layer_program, stack_params, unstack_params
+
+
+# ---------------------------------------------------------------------------
+# Unit-list view (edge simulator)
+# ---------------------------------------------------------------------------
+
+def to_units(cfg: ModelConfig, params) -> Tuple[list, Callable]:
+    """Returns (units, rebuild) where rebuild(units) -> params."""
+    if cfg.family == CNN:
+        units = list(params)
+        return units, lambda us: list(us)
+    program, repeats = layer_program(cfg)
+    reps = unstack_params(params["stack"], repeats)
+    head_unit = {"final_norm": params["final_norm"]}
+    if "head" in params:
+        head_unit["head"] = params["head"]
+    if cfg.is_enc_dec:
+        head_unit["enc_stack"] = params["enc_stack"]
+        head_unit["enc_final_norm"] = params["enc_final_norm"]
+    units = [{"embed": params["embed"]}] + reps + [head_unit]
+
+    def rebuild(us):
+        out = {"embed": us[0]["embed"],
+               "stack": stack_params(us[1:-1]),
+               "final_norm": us[-1]["final_norm"]}
+        if "head" in us[-1]:
+            out["head"] = us[-1]["head"]
+        if "enc_stack" in us[-1]:
+            out["enc_stack"] = us[-1]["enc_stack"]
+            out["enc_final_norm"] = us[-1]["enc_final_norm"]
+        return out
+
+    return units, rebuild
+
+
+def n_cut_units(cfg: ModelConfig, units: list) -> int:
+    """Number of valid cut positions in unit space."""
+    if cfg.family == CNN:
+        return len(units)           # cut after any layer
+    return len(units) - 2           # embed fixed client, head fixed server
+
+
+def layer_cut_to_unit_cut(cfg: ModelConfig, cut_layer: int) -> int:
+    """Map a profile-granularity cut (1..L) to unit granularity."""
+    if cfg.family == CNN:
+        return cut_layer
+    program, repeats = layer_program(cfg)
+    period = len(program)
+    return min(repeats, max(1, -(-cut_layer // period)))
+
+
+def split_units(units: list, cut_units: int, cfg: ModelConfig):
+    """Client keeps units [0, k); server keeps the rest.
+
+    For transformers k counts *repetitions*, so the client side is
+    ``units[0 .. cut_units]`` (embedding + cut_units repetitions).
+    """
+    k = cut_units if cfg.family == CNN else cut_units + 1
+    return units[:k], units[k:]
+
+
+def merge_units(client_units: list, server_units: list) -> list:
+    return list(client_units) + list(server_units)
+
+
+# ---------------------------------------------------------------------------
+# Stacked split (SPMD path)
+# ---------------------------------------------------------------------------
+
+def split_stacked(params: dict, c_reps: int) -> Tuple[dict, dict]:
+    """Split transformer params at super-block repetition ``c_reps``.
+
+    client part: {"embed", "stack_prefix"} — per-client replicable.
+    server part: {"stack_suffix", "final_norm", ("head", enc parts)}.
+    """
+    prefix = jax.tree_util.tree_map(lambda a: a[:c_reps], params["stack"])
+    suffix = jax.tree_util.tree_map(lambda a: a[c_reps:], params["stack"])
+    client = {"embed": params["embed"], "stack_prefix": prefix}
+    server = {k: v for k, v in params.items() if k not in ("embed", "stack")}
+    server["stack_suffix"] = suffix
+    return client, server
+
+
+def merge_stacked(client: dict, server: dict) -> dict:
+    params = {k: v for k, v in server.items() if k != "stack_suffix"}
+    params["embed"] = client["embed"]
+    params["stack"] = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=0),
+        client["stack_prefix"], server["stack_suffix"])
+    return params
+
+
+def replicate_client(client: dict, n: int) -> dict:
+    """Stack N per-client copies along a leading client axis."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), client)
+
+
+def mean_clients(client_stacked: dict) -> dict:
+    return jax.tree_util.tree_map(lambda a: a.mean(axis=0), client_stacked)

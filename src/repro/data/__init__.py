@@ -1,0 +1,3 @@
+from repro.data.synthetic import make_cifar_like, make_lm_data  # noqa: F401
+from repro.data.partition import partition_iid, partition_noniid_shards  # noqa: F401
+from repro.data.pipeline import ClientSampler  # noqa: F401

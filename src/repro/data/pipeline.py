@@ -1,0 +1,47 @@
+"""Per-client batching with heterogeneous batch sizes.
+
+HASFL assigns a different b_i to every client each round.  jit'd steps need
+static shapes, so batches are padded to ``b_max`` with a ``loss_mask``
+(the padded-sample gradient contribution is exactly zero; the mean is taken
+over real samples only — per-client SGD semantics preserved).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class ClientSampler:
+    def __init__(self, arrays: dict, client_indices: list,
+                 rng: np.random.Generator):
+        """arrays: name -> np.ndarray with leading sample axis."""
+        self.arrays = arrays
+        self.client_indices = client_indices
+        self.rng = rng
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.client_indices)
+
+    def sample(self, client: int, batch: int, pad_to: Optional[int] = None):
+        pool = self.client_indices[client]
+        take = self.rng.choice(pool, size=min(batch, len(pool)),
+                               replace=len(pool) < batch)
+        out = {k: v[take] for k, v in self.arrays.items()}
+        n = len(take)
+        pad_to = pad_to or n
+        mask_shape_src = next(iter(out.values()))
+        if pad_to > n:
+            pad = pad_to - n
+            out = {k: np.concatenate(
+                [v, np.zeros((pad,) + v.shape[1:], v.dtype)]) for k, v in out.items()}
+        # loss mask: [pad_to] for images, [pad_to, S] for token data
+        if "tokens" in out:
+            mask = np.zeros(out["tokens"].shape, np.float32)
+            mask[:n] = 1.0
+        else:
+            mask = np.zeros((pad_to,), np.float32)
+            mask[:n] = 1.0
+        out["loss_mask"] = mask
+        return out

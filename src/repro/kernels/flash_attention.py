@@ -1,0 +1,130 @@
+"""Flash attention (fwd) as a Pallas TPU kernel with GQA support.
+
+TPU-adapted blocking (DESIGN.md §6): the [block_q, head_dim] query tile and
+[block_k, head_dim] KV tiles live in VMEM; the online-softmax running
+(m, l, acc) state persists in VMEM scratch across the KV grid dimension
+(TPU grids iterate sequentially, innermost fastest, so the KV dim acts as
+the streaming loop).  MXU-aligned tile sizes (multiples of 128) are chosen
+by the wrapper in ops.py.
+
+Grid: (B * Hq, Sq/block_q, Sk/block_k);  GQA is folded into the BlockSpec
+index maps (each query head reads its kv-group's K/V blocks — no physical
+KV replication in HBM).
+
+Causal/window masking is applied inside the tile.  (A production variant
+would also prune fully-masked KV blocks from the grid; we keep the dense
+grid for determinism — the roofline model prices attention FLOPs causally.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, n_k_blocks: int, sk_valid: int):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                    # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)                    # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < sk_valid
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # [bq]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: [B, Sq, Hq, hd]; k, v: [B, Sk, Hkv, hd] -> [B, Sq, Hq, hd]."""
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    n_q = -(-sq // block_q)
+    n_k = -(-sk // block_k)
+    pad_q = n_q * block_q - sq
+    pad_k = n_k * block_k - sk
+
+    qh = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, hd)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+
+    def q_map(bh, iq, ik):
+        return (bh, iq, 0)
+
+    def kv_map(bh, iq, ik):
+        bb = bh // hq
+        h_kv = (bh % hq) // group
+        return (bb * hkv + h_kv, ik, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k_blocks=n_k, sk_valid=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, n_q * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = out[:, :sq].reshape(b, hq, sq, hd).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,115 @@
+"""mLSTM matrix-memory recurrence as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §6): the per-head state (C [hd, hd], n [hd],
+m [1]) is **resident in VMEM scratch for the whole sequence** while q/k/v
+and gate chunks stream HBM->VMEM block by block — the recurrence never
+round-trips its O(hd^2) state through HBM (the xLSTM paper's GPU kernel
+keeps it in registers/SMEM; VMEM is the TPU analogue).
+
+Grid: (B*H, n_chunks) — chunks iterate sequentially (innermost TPU grid
+dim), the fori_loop inside walks time steps within the chunk, all math on
+the VPU/MXU in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
+            c_scr, n_scr, m_scr, *, chunk: int, n_chunks: int, scale: float):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+
+    def step(t, _):
+        qt = q_ref[0, t].astype(jnp.float32)            # [hd]
+        kt = k_ref[0, t].astype(jnp.float32) * scale
+        vt = v_ref[0, t].astype(jnp.float32)
+        it = i_ref[0, t].astype(jnp.float32)
+        ft = f_ref[0, t].astype(jnp.float32)
+        log_f = -jax.nn.softplus(-ft)
+        m_prev = m_scr[0]
+        m_new = jnp.maximum(log_f + m_prev, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(log_f + m_prev - m_new)
+        c = f_g * c_scr[...] + i_g * (vt[:, None] * kt[None, :])
+        n = f_g * n_scr[...] + i_g * kt
+        c_scr[...] = c
+        n_scr[...] = n
+        m_scr[0] = m_new
+        num = c @ qt
+        den = jnp.maximum(jnp.abs(jnp.dot(n, qt)), jnp.exp(-m_new))
+        h_ref[0, t] = (num / den).astype(h_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, chunk, step, ())
+
+
+def mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: int = 128,
+               interpret: bool = True):
+    """q,k,v: [B, S, H, hd]; gates: [B, S, H] -> h: [B, S, H, hd]."""
+    b, s, h, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+
+    def fold(t):  # [B,S,H,hd] -> [B*H, S, hd]
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    def foldg(t):  # [B,S,H] -> [B*H, S]
+        return t.transpose(0, 2, 1).reshape(b * h, s)
+
+    qh, kh, vh = fold(q), fold(k), fold(v)
+    ih, fh = foldg(i_gate), foldg(f_gate)
+    if pad:
+        qh = jnp.pad(qh, ((0, 0), (0, pad), (0, 0)))
+        kh = jnp.pad(kh, ((0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad), (0, 0)))
+        ih = jnp.pad(ih, ((0, 0), (0, pad)))
+        # padded steps must not pollute state: forget-gate pre-act +inf
+        # (f=1, i=0) keeps state frozen
+        fh = jnp.pad(fh, ((0, 0), (0, pad)), constant_values=30.0)
+        ih = jnp.pad(foldg(i_gate), ((0, 0), (0, pad)),
+                     constant_values=-1e30)
+
+    def bmap(bh, ic):
+        return (bh, ic, 0)
+
+    def gmap(bh, ic):
+        return (bh, ic)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), bmap),
+            pl.BlockSpec((1, chunk, hd), bmap),
+            pl.BlockSpec((1, chunk, hd), bmap),
+            pl.BlockSpec((1, chunk), gmap),
+            pl.BlockSpec((1, chunk), gmap),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), bmap),
+        out_shape=jax.ShapeDtypeStruct((b * h, n_chunks * chunk, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((hd,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh, ih, fh)
+
+    out = out[:, :s].reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,46 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On a real TPU (``jax.default_backend() == 'tpu'``) the compiled kernels
+run natively; elsewhere they run in interpret mode (CPU validation) or
+fall back to the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref as REF
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mlstm_scan import mlstm_scan as _mlstm
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto"):
+    """impl: auto | kernel | interpret | ref."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return REF.flash_attention_ref(q, k, v, causal=causal, window=window)
+    interpret = (impl == "interpret") or not _on_tpu()
+    return _flash(q, k, v, causal=causal, window=window, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def mlstm_scan(q, k, v, i_gate, f_gate, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return REF.mlstm_scan_ref(q, k, v, i_gate, f_gate)
+    interpret = (impl == "interpret") or not _on_tpu()
+    return _mlstm(q, k, v, i_gate, f_gate, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
+def rmsnorm(x, scale, eps: float = 1e-5, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return REF.rmsnorm_ref(x, scale, eps)
+    interpret = (impl == "interpret") or not _on_tpu()
+    return _rmsnorm(x, scale, eps, interpret=interpret)

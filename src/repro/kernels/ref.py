@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B, Sq, Hq, hd]; k, v: [B, Sk, Hkv, hd] -> [B, Sq, Hq, hd]."""
+    from repro.models.attention import naive_attention
+    return naive_attention(q, k, v, causal=causal, window=window)
+
+
+def mlstm_scan_ref(q, k, v, i_gate, f_gate):
+    """Stabilized mLSTM recurrence (sequential oracle).
+
+    q,k,v: [B, S, H, hd]; gates: [B, S, H] pre-activations.
+    """
+    from repro.models.ssm import mlstm_scan_ref as _ref
+    return _ref(q, k, v, i_gate, f_gate)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    from repro.models.layers import rmsnorm
+    return rmsnorm(x, scale, eps)

@@ -1,0 +1,42 @@
+"""Fused RMSNorm Pallas kernel: one HBM read, f32 accumulation in VMEM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-5, *, block_rows: int = 256,
+            interpret: bool = True):
+    """x: [..., d]; scale: [d]."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xr = x.reshape(-1, d)
+    rows = xr.shape[0]
+    block_rows = min(block_rows, rows)
+    n_blocks = -(-rows // block_rows)
+    pad = n_blocks * block_rows - rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block_rows, d), x.dtype),
+        interpret=interpret,
+    )(xr, scale)
+    return out[:rows].reshape(orig_shape)

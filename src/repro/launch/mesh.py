@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set XLA_FLAGS
+before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host offers (tests / CPU smoke): (n_dev/model, model)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,162 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs_global  / (chips * peak_FLOP/s)
+    memory     = HLO_bytes_global  / (chips * HBM_bw)
+    collective = coll_bytes_perdev / link_bw    (per-device HLO operands,
+                 equivalent to global_bytes / (chips * link_bw))
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Empirical
+calibration on this jax/XLA build (see EXPERIMENTS.md §Dry-run): XLA's
+cost analysis of an SPMD-partitioned module reports **per-device** numbers
+and counts while-loop bodies **once** — so the dry-run lowers an *unrolled*
+cost variant, and this module multiplies by ``chips`` to report global
+FLOPs/bytes.  Collective
+bytes are parsed from the (SPMD-partitioned, hence per-device) HLO text by
+summing operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops, with op-specific wire multipliers
+(all-reduce moves ~2x its operand in a ring).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.config import HWSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# bytes-on-the-wire multiplier vs operand size (ring algorithms)
+_WIRE_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_op.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.count_by_op.values()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in (per-device) HLO."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in _COLLECTIVES:
+            # match an op invocation: "= <out-type> all-reduce(" or
+            # "... all-gather-start(" etc.  (variable names may also contain
+            # the op name, hence anchoring on "= <type> <op>(").
+            m = re.search(r"=\s+(\S+)\s+" + op + r"(-start)?\(", stripped)
+            if not m:
+                continue
+            # operand shapes: types inside the call parens (present when
+            # operands are typed); otherwise the output type (group 1).
+            call = stripped[m.end():]
+            operands = _SHAPE_RE.findall(call)
+            if not operands:
+                operands = _SHAPE_RE.findall(m.group(1))
+            b = sum(_shape_bytes(dt, dims) for dt, dims in operands)
+            b *= _WIRE_MULT[op]
+            stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0.0) + b
+            stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+            break
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float               # global HLO flops (= per-device cost * chips)
+    hbm_bytes: float           # global bytes accessed
+    collective_bytes: float    # per-device wire bytes
+    chips: int
+    hw: HWSpec = TPU_V5E
+    collectives: CollectiveStats = None
+    model_flops: float = 0.0   # 6*N*D analytic
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * self.hw.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / self.hw.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+        }
+
+
+def analyze(compiled, hlo_text: str, chips: int,
+            model_flops: float = 0.0, hw: HWSpec = TPU_V5E) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    # cost_analysis of the partitioned module is per-device: scale to global
+    flops = float(cost.get("flops", 0.0)) * chips
+    hbm = float(cost.get("bytes accessed", 0.0)) * chips
+    coll = parse_collectives(hlo_text)
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    collective_bytes=coll.total_bytes, chips=chips, hw=hw,
+                    collectives=coll, model_flops=model_flops)
+
+
+def analytic_model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); D = tokens."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,142 @@
+"""Training launcher.
+
+Two modes:
+- ``edge``: the paper-faithful HASFL edge simulation (N heterogeneous
+  clients, BS+MS controller, latency model) on a CNN or small LM.
+- ``spmd``: the pod-style SPMD HASFL step on this host's devices (client-
+  stacked prefix + server tier), for end-to-end training of a small LM.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --mode edge --arch vgg9-cifar-small --rounds 100
+    PYTHONPATH=src python -m repro.launch.train --mode spmd --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def run_edge(args) -> None:
+    import jax
+    from repro.config import get_config, SFLConfig
+    from repro.core.profiles import model_profile
+    from repro.core.latency import sample_devices
+    from repro.core.sfl import SFLEdgeSimulator
+    from repro.core.bcd import HASFLOptimizer
+    from repro.core import baselines
+    from repro.models import build_model
+    from repro.data import (make_cifar_like, partition_iid,
+                            partition_noniid_shards, ClientSampler)
+    from repro.training.metrics import MetricLogger
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    rng = np.random.default_rng(args.seed)
+    (xtr, ytr), (xte, yte) = make_cifar_like(
+        cfg.n_classes, args.n_train, args.n_test, cfg.image_size,
+        seed=args.seed)
+    if args.iid:
+        shards = partition_iid(len(ytr), args.clients, rng)
+    else:
+        shards = partition_noniid_shards(ytr, args.clients, rng)
+    sampler = ClientSampler({"images": xtr, "labels": ytr}, shards, rng)
+    sfl = SFLConfig(n_devices=args.clients, agg_interval=args.agg_interval,
+                    lr=args.lr)
+    profile = model_profile(cfg)
+    devices = sample_devices(args.clients, rng)
+    opt = HASFLOptimizer(profile, devices, sfl)
+
+    def policy(sim, prng):
+        return baselines.policy(args.policy, opt, prng)
+
+    sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
+                           devices, sfl, profile, seed=args.seed)
+    res = sim.run(policy, rounds=args.rounds, eval_every=args.eval_every,
+                  verbose=True)
+    print(f"final acc={res.test_acc[-1]:.4f} "
+          f"converged_time={res.converged_time():.1f}s "
+          f"simulated_clock={res.clock[-1]:.1f}s")
+    if args.csv:
+        log = MetricLogger(args.csv, print_every=0)
+        for i, r in enumerate(res.rounds):
+            log.log(r, clock=res.clock[i], train_loss=res.train_loss[i],
+                    test_acc=res.test_acc[i], test_loss=res.test_loss[i])
+        log.close()
+
+
+def run_spmd(args) -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.config import get_config, reduced
+    from repro.core.sfl import make_hasfl_train_step
+    from repro.models import build_model
+    from repro.data import make_lm_data
+    from repro.training.metrics import MetricLogger
+
+    cfg = reduced(get_config(args.arch), n_layers=args.layers,
+                  d_model=args.d_model,
+                  n_heads=max(2, args.d_model // 64),
+                  n_kv_heads=max(1, args.d_model // 128),
+                  d_ff=args.d_model * 4, vocab_size=args.vocab,
+                  head_dim=0) if args.reduce else get_config(args.arch)
+    model = build_model(cfg)
+    n, b, s = args.clients, args.batch, args.seq
+    init_state, train_step = make_hasfl_train_step(
+        model, n_clients=n, cut_reps=max(1, args.layers // 4),
+        agg_interval=args.agg_interval, optimizer_name="adam", lr=args.lr,
+        grad_accum=args.grad_accum, remat=False)
+    state = init_state(jax.random.PRNGKey(args.seed))
+    step_fn = jax.jit(train_step)
+    tokens, labels = make_lm_data(cfg.vocab_size, n * b * 64, s,
+                                  seed=args.seed)
+    tokens = tokens.reshape(-1, n, b, s)
+    labels = labels.reshape(-1, n, b, s)
+    log = MetricLogger(args.csv, print_every=args.eval_every)
+    t0 = time.time()
+    for t in range(args.steps):
+        i = t % tokens.shape[0]
+        batch = {"tokens": jnp.asarray(tokens[i]),
+                 "labels": jnp.asarray(labels[i])}
+        state, m = step_fn(state, batch)
+        log.log(t + 1, loss=float(m["loss"]),
+                steps_per_s=(t + 1) / (time.time() - t0))
+    log.close()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["edge", "spmd"], default="edge")
+    ap.add_argument("--arch", default="vgg9-cifar-small")
+    ap.add_argument("--policy", default="hasfl")
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--agg-interval", type=int, default=15, dest="agg_interval")
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--iid", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=10, dest="eval_every")
+    ap.add_argument("--n-train", type=int, default=2000, dest="n_train")
+    ap.add_argument("--n-test", type=int, default=400, dest="n_test")
+    ap.add_argument("--csv", default=None)
+    # spmd extras
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=256, dest="d_model")
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--grad-accum", type=int, default=1, dest="grad_accum")
+    ap.add_argument("--reduce", action="store_true", default=True)
+    args = ap.parse_args()
+    if args.mode == "edge":
+        run_edge(args)
+    else:
+        if args.arch == "vgg9-cifar-small":
+            args.arch = "smollm-135m"
+        run_spmd(args)
+
+
+if __name__ == "__main__":
+    main()

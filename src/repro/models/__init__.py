@@ -1,0 +1,1 @@
+from repro.models.factory import build_model  # noqa: F401

@@ -1,0 +1,135 @@
+"""CNN models (VGG-16 / ResNet-18 families) for the paper-faithful CIFAR
+experiments.  Implemented as an explicit list of *cuttable layers* so the
+HASFL split/latency machinery applies at conv/fc granularity, exactly as the
+paper splits VGG-16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+# VGG max-pools after these conv indices (1-based within conv stack)
+_VGG_POOLS = {2: True, 4: True, 7: True, 10: True, 13: True,
+              # reduced 6-conv variant
+              6: True}
+
+
+def _conv_init(rng, cin, cout):
+    scale = np.sqrt(2.0 / (9 * cin))
+    return {"w": jax.random.normal(rng, (3, 3, cin, cout)) * scale,
+            "b": jnp.zeros((cout,))}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def cnn_init(rng, cfg: ModelConfig) -> list:
+    """Returns a list of per-layer param dicts (the cuttable units)."""
+    params = []
+    cin = 3
+    rngs = jax.random.split(rng, cfg.n_cut_points + 1)
+    idx = 0
+    for i, c in enumerate(cfg.conv_channels):
+        p = _conv_init(rngs[idx], cin, c)
+        if cfg.residual and i > 0 and cin != c:
+            p["proj"] = _conv_init(jax.random.fold_in(rngs[idx], 7), cin, c)
+        params.append(p)
+        cin = c
+        idx += 1
+    # infer flatten dim by simulation at trace time; store dims lazily
+    spatial = cfg.image_size
+    n_pools = 0
+    for i in range(1, len(cfg.conv_channels) + 1):
+        if _pool_after(cfg, i):
+            n_pools += 1
+    if cfg.residual:
+        # resnet: stage downsampling via stride-2 at channel changes
+        changes = sum(1 for i in range(1, len(cfg.conv_channels))
+                      if cfg.conv_channels[i] != cfg.conv_channels[i - 1])
+        spatial = max(1, cfg.image_size // (2 ** changes))
+        flat = cfg.conv_channels[-1]  # global average pool
+    else:
+        spatial = max(1, cfg.image_size // (2 ** n_pools))
+        flat = cin * spatial * spatial
+    prev = flat
+    for f in cfg.fc_dims:
+        w = jax.random.normal(rngs[idx], (prev, f)) / np.sqrt(prev)
+        params.append({"w": w, "b": jnp.zeros((f,))})
+        prev = f
+        idx += 1
+    w = jax.random.normal(rngs[idx], (prev, cfg.n_classes)) / np.sqrt(prev)
+    params.append({"w": w, "b": jnp.zeros((cfg.n_classes,))})
+    return params
+
+
+def cnn_layer_kinds(cfg: ModelConfig) -> list:
+    return (["conv"] * len(cfg.conv_channels)
+            + ["fc"] * len(cfg.fc_dims) + ["head"])
+
+
+def _pool_after(cfg: ModelConfig, conv_idx_1based: int) -> bool:
+    if cfg.residual:
+        return False
+    if len(cfg.conv_channels) == 13:  # full VGG-16
+        return conv_idx_1based in (2, 4, 7, 10, 13)
+    # reduced variants: pool every 2 convs
+    return conv_idx_1based % 2 == 0
+
+
+def cnn_forward_layers(params: list, x: jax.Array, cfg: ModelConfig,
+                       start: int = 0, stop: int = None) -> jax.Array:
+    """Run layers [start, stop) — the split-learning primitive."""
+    stop = len(params) if stop is None else stop
+    kinds = cnn_layer_kinds(cfg)
+    conv_seen = 0
+    for i, p in enumerate(params):
+        kind = kinds[i]
+        active = start <= i < stop
+        if kind == "conv":
+            conv_seen += 1
+            if not active:
+                prev_channels = p["w"].shape[-1]
+                continue
+            if cfg.residual and "proj" not in p and x.shape[-1] == p["w"].shape[-1]:
+                x = jax.nn.relu(_conv(p, x) + x)
+            elif cfg.residual and "proj" in p:
+                x = jax.nn.relu(_conv(p, x, stride=2) + _conv(p["proj"], x, stride=2))
+            else:
+                x = jax.nn.relu(_conv(p, x))
+            if _pool_after(cfg, conv_seen):
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                    "VALID")
+        else:
+            if not active:
+                continue
+            if x.ndim == 4:
+                if cfg.residual:
+                    x = x.mean(axis=(1, 2))          # global average pool
+                else:
+                    x = x.reshape(x.shape[0], -1)     # flatten
+            x = x @ p["w"] + p["b"]
+            if kind == "fc":
+                x = jax.nn.relu(x)
+    return x
+
+
+def cnn_loss(params: list, images, labels, cfg: ModelConfig, loss_mask=None):
+    logits = cnn_forward_layers(params, images, cfg)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    if loss_mask is not None:
+        total = jnp.maximum(loss_mask.sum(), 1.0)
+        loss = (nll * loss_mask).sum() / total
+        acc = (((logits.argmax(-1) == labels) * loss_mask).sum() / total)
+    else:
+        loss = nll.mean()
+        acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"accuracy": acc}

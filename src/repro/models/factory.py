@@ -1,0 +1,310 @@
+"""Public model API: build_model(cfg) -> Model bundle.
+
+One entry point for all 12 architectures (10 assigned + 2 paper CNNs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, AUDIO, VLM, CNN
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import cnn as C
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable          # rng -> params
+    apply: Callable         # (params, batch, shard_fn=None) -> (logits, aux)
+    loss: Callable          # (params, batch, shard_fn=None) -> (loss, metrics)
+    init_cache: Callable    # (batch, cache_len) -> cache
+    prefill: Callable       # (params, batch) -> (logits, cache)
+    decode_step: Callable   # (params, cache, batch) -> (logits, cache)
+    split_loss: Callable = None  # HASFL split loss (transformers only)
+
+
+def _merge_patches(x, patch_embeddings, patch_mask):
+    """Place patch embeddings (in order) at masked positions."""
+    idx = jnp.cumsum(patch_mask.astype(jnp.int32), axis=1) - 1
+    idx = jnp.clip(idx, 0, patch_embeddings.shape[1] - 1)
+    gathered = jnp.take_along_axis(
+        patch_embeddings, idx[..., None].astype(jnp.int32), axis=1)
+    return jnp.where(patch_mask[..., None], gathered.astype(x.dtype), x)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == CNN:
+        return _build_cnn(cfg)
+    return _build_transformer(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Transformer-family models
+# ---------------------------------------------------------------------------
+
+def _build_transformer(cfg: ModelConfig) -> Model:
+    program, repeats = T.layer_program(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(rng):
+        r_emb, r_stack, r_head, r_enc = jax.random.split(rng, 4)
+        params = {
+            "embed": L.embed_init(r_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "stack": T.stack_init(r_stack, cfg, program, repeats),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = L.dense_init(r_head, cfg.d_model, cfg.vocab_size,
+                                          dtype)
+        if cfg.is_enc_dec:
+            enc_prog, enc_reps = T.encoder_program(cfg)
+            params["enc_stack"] = T.stack_init(r_enc, cfg, enc_prog, enc_reps)
+            params["enc_final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        return params
+
+    def _encode(params, frame_embeddings, shard_fn=None):
+        enc_prog, _ = T.encoder_program(cfg)
+        s = frame_embeddings.shape[1]
+        pos_table = jnp.asarray(L.sinusoidal_positions(s, cfg.d_model), dtype)
+        x = frame_embeddings.astype(dtype) + pos_table[None]
+        ctx = {"positions": jnp.arange(s)[None, :], "shard_fn": shard_fn}
+        x, _ = T.stack_fwd(params["enc_stack"], x, cfg, enc_prog, ctx)
+        return L.rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    def _embed_inputs(params, batch):
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        if cfg.family == VLM and "patch_embeddings" in batch:
+            x = _merge_patches(x, batch["patch_embeddings"],
+                               batch["patch_mask"])
+        if cfg.is_enc_dec and cfg.rope_theta <= 0:
+            s = tokens.shape[1]
+            x = x + jnp.asarray(L.sinusoidal_positions(s, cfg.d_model),
+                                dtype)[None]
+        return x
+
+    def _logits(params, x):
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return x @ head
+
+    def apply(params, batch, shard_fn=None, remat=False, window=None,
+              unroll=False, rep_shard_fn=None):
+        x = _embed_inputs(params, batch)
+        s = batch["tokens"].shape[1]
+        ctx = {"positions": jnp.arange(s)[None, :], "shard_fn": shard_fn,
+               "rep_shard_fn": rep_shard_fn}
+        if window is not None:
+            ctx["window"] = window
+        if cfg.is_enc_dec:
+            ctx["enc_out"] = _encode(params, batch["frame_embeddings"],
+                                     shard_fn)
+        x, aux = T.stack_fwd(params["stack"], x, cfg, program, ctx,
+                             remat=remat, unroll=unroll)
+        return _logits(params, x), {"lb_loss": aux}
+
+    def _hidden(params, batch, shard_fn=None, remat=False, window=None,
+                unroll=False, rep_shard_fn=None):
+        x = _embed_inputs(params, batch)
+        s = batch["tokens"].shape[1]
+        ctx = {"positions": jnp.arange(s)[None, :], "shard_fn": shard_fn,
+               "rep_shard_fn": rep_shard_fn}
+        if window is not None:
+            ctx["window"] = window
+        if cfg.is_enc_dec:
+            ctx["enc_out"] = _encode(params, batch["frame_embeddings"],
+                                     shard_fn)
+        x, aux = T.stack_fwd(params["stack"], x, cfg, program, ctx,
+                             remat=remat, unroll=unroll)
+        return L.rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+    import os as _os
+    CE_CHUNK = int(_os.environ.get("REPRO_CE_CHUNK", "512"))
+
+    def _chunked_ce(x, head, labels, mask, unroll):
+        b, s, d = x.shape
+        cs = min(CE_CHUNK, s)
+        n_chunks = s // cs if s % cs == 0 else 1
+        if s % cs != 0:
+            cs = s
+        xc = x.reshape(b, n_chunks, cs, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(b, n_chunks, cs).transpose(1, 0, 2)
+        mc = None if mask is None else \
+            mask.reshape(b, n_chunks, cs).transpose(1, 0, 2)
+
+        def chunk(carry, xs):
+            if mc is None:
+                xck, lck = xs
+                m = None
+            else:
+                xck, lck, m = xs
+            logits = (xck @ head).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(logits, lck[..., None], axis=-1)[..., 0]
+            nll = lse - tgt
+            if m is not None:
+                nll = nll * m
+            return carry + nll.sum(), None
+
+        xs = (xc, lc) if mc is None else (xc, lc, mc)
+        nll_sum, _ = jax.lax.scan(chunk, 0.0, xs,
+                                  unroll=n_chunks if unroll else 1)
+        total = float(b * s) if mask is None else jnp.maximum(mask.sum(), 1.0)
+        return nll_sum / total
+
+    def loss(params, batch, shard_fn=None, remat=False, unroll=False,
+             rep_shard_fn=None):
+        """Cross-entropy via _chunked_ce (bounds the [.., vocab] f32
+        softmax memory to CE_CHUNK tokens at a time)."""
+        x, aux = _hidden(params, batch, shard_fn=shard_fn, remat=remat,
+                         unroll=unroll, rep_shard_fn=rep_shard_fn)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        ce = _chunked_ce(x, head, batch["labels"], batch.get("loss_mask"),
+                         unroll)
+        lb = 0.01 * aux / max(1, repeats)
+        metrics = {"ce": ce, "lb_loss": aux}
+        return ce + lb, metrics
+
+    def split_loss(client_stacked, server, batch, *, shard_fn=None,
+                   remat=False, unroll=False, rep_shard_fn=None):
+        """HASFL split-training loss (paper Sec. III-B, exactly):
+
+        - each client's embedding + prefix blocks run per-client (vmap over
+          the client-stacked params),
+        - the server CONCATENATES all clients' activations into one batch
+          ("server-side sub-model training is equivalent to concatenating
+          the entire batch from all clients", Sec. I) and runs the suffix
+          once.
+
+        This is both the faithful dataflow and the memory-correct one: a
+        naive vmap of the full model materializes per-client copies of
+        every server weight gradient (measured +80 GB/device on dbrx).
+        """
+        n = batch["tokens"].shape[0]
+        bsz = batch["tokens"].shape[1]
+        s = batch["tokens"].shape[2]
+        positions = jnp.arange(s)[None, :]
+
+        enc_out = None
+        if cfg.is_enc_dec:
+            fe = batch["frame_embeddings"]
+            fe_m = fe.reshape((-1,) + fe.shape[2:])
+            enc_out = _encode({"enc_stack": server["enc_stack"],
+                               "enc_final_norm": server["enc_final_norm"]},
+                              fe_m, shard_fn)
+
+        def prefix_fwd(client_i, batch_i, enc_i):
+            x = client_i["embed"][batch_i["tokens"]]
+            if cfg.family == VLM and "patch_embeddings" in batch_i:
+                x = _merge_patches(x, batch_i["patch_embeddings"],
+                                   batch_i["patch_mask"])
+            if cfg.is_enc_dec and cfg.rope_theta <= 0:
+                x = x + jnp.asarray(L.sinusoidal_positions(s, cfg.d_model),
+                                    dtype)[None]
+            ctx = {"positions": positions, "shard_fn": shard_fn,
+                   "rep_shard_fn": rep_shard_fn}
+            if enc_i is not None:
+                ctx["enc_out"] = enc_i
+            leaves = jax.tree_util.tree_leaves(client_i["stack_prefix"])
+            if leaves and leaves[0].shape[0] > 0:
+                x, aux = T.stack_fwd(client_i["stack_prefix"], x, cfg,
+                                     program, ctx, remat=remat,
+                                     unroll=unroll)
+            else:
+                aux = 0.0
+            return x, aux
+
+        enc_per_client = None
+        if enc_out is not None:
+            enc_per_client = enc_out.reshape((n, bsz) + enc_out.shape[1:])
+        xs, aux_c = jax.vmap(
+            prefix_fwd,
+            in_axes=(0, 0, 0 if enc_out is not None else None))(
+            client_stacked, batch, enc_per_client)
+        # --- activation hand-off: concatenate the client batch (a2) -----
+        x = xs.reshape((n * bsz,) + xs.shape[2:])
+        ctx = {"positions": positions, "shard_fn": shard_fn,
+               "rep_shard_fn": rep_shard_fn}
+        if enc_out is not None:
+            ctx["enc_out"] = enc_out
+        x, aux_s = T.stack_fwd(server["stack_suffix"], x, cfg, program, ctx,
+                               remat=remat, unroll=unroll)
+        x = L.rmsnorm(x, server["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            # a per-client tied head would re-introduce the vmap blowup;
+            # use the client-mean embedding as the (shared) head — exact
+            # whenever clients are synchronized, standard approximation
+            # between aggregations.
+            head = client_stacked["embed"].mean(axis=0).T
+        else:
+            head = server["head"]
+        labels = batch["labels"].reshape(n * bsz, s)
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            mask = mask.reshape(n * bsz, s)
+        ce = _chunked_ce(x, head, labels, mask, unroll)
+        lb = 0.01 * (jnp.sum(aux_c) + aux_s) / max(1, repeats)
+        return ce + lb, {"ce": ce}
+
+    def init_cache(batch, cache_len, window=None):
+        return T.cache_init(cfg, batch, cache_len, window)
+
+    def prefill(params, batch, cache_len=None, window=None, unroll=False):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache_len = cache_len or s
+        cache = T.cache_init(cfg, b, cache_len, window)
+        x = _embed_inputs(params, batch)
+        ctx = {"positions": jnp.arange(s)[None, :], "unroll": unroll}
+        if window is not None:
+            ctx["window"] = window
+        if cfg.is_enc_dec:
+            ctx["enc_out"] = _encode(params, batch["frame_embeddings"])
+        x, cache = T.stack_prefill(params["stack"], cache, x, cfg, program,
+                                   ctx)
+        return _logits(params, x[:, -1:]), cache
+
+    def decode_step(params, cache, batch, window=None, unroll=False):
+        tokens, positions = batch["tokens"], batch["positions"]
+        x = params["embed"][tokens]                 # [B, 1, d]
+        if cfg.is_enc_dec and cfg.rope_theta <= 0:
+            pos_table = jnp.asarray(
+                L.sinusoidal_positions(8192, cfg.d_model), dtype)
+            x = x + pos_table[jnp.clip(positions, 0, 8191)][:, None]
+        ctx = {"positions": positions, "unroll": unroll}
+        if window is not None:
+            ctx["window"] = window
+        x, cache = T.stack_decode(params["stack"], cache, x, cfg, program,
+                                  ctx)
+        return _logits(params, x), cache
+
+    model = Model(cfg, init, apply, loss, init_cache, prefill, decode_step)
+    model.split_loss = split_loss
+    return model
+
+
+# ---------------------------------------------------------------------------
+# CNNs
+# ---------------------------------------------------------------------------
+
+def _build_cnn(cfg: ModelConfig) -> Model:
+    def init(rng):
+        return C.cnn_init(rng, cfg)
+
+    def apply(params, batch, shard_fn=None, **kw):
+        return C.cnn_forward_layers(params, batch["images"], cfg), {}
+
+    def loss(params, batch, shard_fn=None, **kw):
+        return C.cnn_loss(params, batch["images"], batch["labels"], cfg,
+                          loss_mask=batch.get("loss_mask"))
+
+    def _no_cache(*a, **k):
+        raise NotImplementedError("CNNs have no decode path")
+
+    return Model(cfg, init, apply, loss, _no_cache, _no_cache, _no_cache)

@@ -1,0 +1,106 @@
+"""Mamba-1 selective-scan mixer (for the Jamba hybrid).  [arXiv:2312.00752]"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rmsnorm, chunked_scan
+
+
+def mamba_init(rng, d: int, *, expand: int, state_dim: int, conv_dim: int,
+               dtype) -> dict:
+    d_in = expand * d
+    rs = jax.random.split(rng, 6)
+    dt_init = jnp.log(jnp.exp(jnp.linspace(1e-3, 1e-1, d_in)) - 1.0)
+    return {
+        "norm_in": jnp.ones((d,), jnp.float32),
+        "w_in": dense_init(rs[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(rs[1], (conv_dim, d_in))
+                   / np.sqrt(conv_dim)).astype(jnp.float32),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "w_bc": dense_init(rs[2], d_in, 2 * state_dim, jnp.float32),
+        "w_dt": dense_init(rs[3], d_in, d_in, jnp.float32),
+        "b_dt": dt_init.astype(jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, state_dim + 1, dtype=jnp.float32), (d_in, state_dim))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(rs[4], d_in, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i]
+    return out + b
+
+
+def mamba_block(params: dict, x: jax.Array, *, state_dim: int,
+                eps: float = 1e-5) -> jax.Array:
+    """Full-sequence selective scan. x: [B, S, d]; returns block output."""
+    b, s, d = x.shape
+    xn = rmsnorm(x, params["norm_in"], eps)
+    xz = xn @ params["w_in"]
+    x1, z = jnp.split(xz, 2, axis=-1)                 # [B,S,d_in] each
+    # streams stay in the compute dtype (bf16); only the carried state and
+    # the per-step update run in f32 — full-sequence f32 intermediates at
+    # d_in=8192 cost ~1 GB/layer/device (measured on jamba train_4k)
+    x1 = jax.nn.silu(_causal_conv(x1, params["conv_w"],
+                                  params["conv_b"])).astype(x.dtype)
+    bc = x1 @ params["w_bc"].astype(x.dtype)          # [B,S,2N]
+    b_mat, c_mat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(x1.astype(jnp.float32) @ params["w_dt"]
+                         + params["b_dt"]).astype(x.dtype)
+    a = -jnp.exp(params["a_log"])                     # [d_in, N]
+
+    def step(state, xs):
+        x_t, dt_t, b_t, c_t = xs                      # bf16 in, f32 math
+        x_t = x_t.astype(jnp.float32)
+        dt_t = dt_t.astype(jnp.float32)
+        b_t = b_t.astype(jnp.float32)
+        c_t = c_t.astype(jnp.float32)
+        da = jnp.exp(dt_t[..., None] * a)             # [B,d_in,N]
+        state = da * state + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", state, c_t)
+        return state, y.astype(x.dtype)
+
+    s0 = jnp.zeros((b, x1.shape[-1], state_dim), jnp.float32)
+    xs = (x1.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          b_mat.transpose(1, 0, 2), c_mat.transpose(1, 0, 2))
+    _, ys = chunked_scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2) + (params["d_skip"] * x1.astype(jnp.float32)
+                                 ).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"]
+
+
+def mamba_decode_init(batch: int, d_in: int, state_dim: int, conv_dim: int):
+    return {"ssm": jnp.zeros((batch, d_in, state_dim), jnp.float32),
+            "conv": jnp.zeros((batch, conv_dim - 1, d_in), jnp.float32)}
+
+
+def mamba_block_decode(params, x, state, *, state_dim: int, eps: float = 1e-5):
+    """Single-token step. x: [B, 1, d]."""
+    b, _, d = x.shape
+    xn = rmsnorm(x, params["norm_in"], eps)
+    xz = (xn @ params["w_in"])[:, 0]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    # conv with carried buffer
+    hist = jnp.concatenate([state["conv"], x1[:, None].astype(jnp.float32)],
+                           axis=1)                     # [B, K, d_in]
+    conv = jnp.einsum("bkc,kc->bc", hist, params["conv_w"]) + params["conv_b"]
+    x1c = jax.nn.silu(conv)
+    bc = x1c @ params["w_bc"]
+    b_t, c_t = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(x1c @ params["w_dt"] + params["b_dt"])
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt[..., None] * a)
+    ssm = da * state["ssm"] + (dt * x1c)[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", ssm, c_t) + params["d_skip"] * x1c
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ params["w_out"])[:, None]
+    return out, {"ssm": ssm, "conv": hist[:, 1:]}

@@ -1,0 +1,1 @@
+from repro.training.optim import make_optimizer  # noqa: F401

@@ -1,0 +1,43 @@
+"""Numpy-based checkpointing (no external deps)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(path, f"ckpt_{step}.npz"), **arrays)
+    with open(os.path.join(path, f"ckpt_{step}.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "n_leaves": len(leaves),
+                   "step": step}, f)
+
+
+def latest_step(path: str):
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[5:-4]) for f in os.listdir(path)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, tree_like, step: int = None):
+    """Restore into the structure of ``tree_like``."""
+    step = latest_step(path) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    data = np.load(os.path.join(path, f"ckpt_{step}.npz"))
+    leaves, treedef = _flatten(tree_like)
+    new_leaves = [data[f"leaf_{i}"].astype(np.asarray(l).dtype)
+                  for i, l in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

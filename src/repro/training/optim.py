@@ -1,0 +1,90 @@
+"""Optimizers (SGD / momentum / Adam) as init/update pairs.
+
+State dtype is configurable: the 400B dry-run keeps Adam moments in bf16 to
+fit v5e HBM on a single pod (documented in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable    # params -> state
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+    name: str = ""
+
+
+def make_optimizer(name: str = "adam", lr: float = 3e-4, *,
+                   momentum: float = 0.9, b1: float = 0.9, b2: float = 0.999,
+                   eps: float = 1e-8, weight_decay: float = 0.0,
+                   state_dtype: str = "float32") -> Optimizer:
+    sd = jnp.dtype(state_dtype)
+    name = name.lower()
+
+    def cast(x):
+        return x.astype(sd) if jnp.issubdtype(x.dtype, jnp.floating) else x
+
+    if name == "sgd":
+        def init(params):
+            return ()
+
+        def update(grads, state, params, step):
+            new = jax.tree_util.tree_map(
+                lambda p, g: p - lr * (g + weight_decay * p).astype(p.dtype),
+                params, grads)
+            return new, state
+        return Optimizer(init, update, "sgd")
+
+    if name == "momentum":
+        def init(params):
+            return jax.tree_util.tree_map(lambda p: cast(jnp.zeros_like(p)),
+                                          params)
+
+        def update(grads, state, params, step):
+            new_m = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(m.dtype), state, grads)
+            new_p = jax.tree_util.tree_map(
+                lambda p, m: p - lr * (m.astype(p.dtype) + weight_decay * p),
+                params, new_m)
+            return new_p, new_m
+        return Optimizer(init, update, "momentum")
+
+    if name == "adam":
+        def init(params):
+            z = lambda p: cast(jnp.zeros_like(p))
+            return {"m": jax.tree_util.tree_map(z, params),
+                    "v": jax.tree_util.tree_map(z, params)}
+
+        def update(grads, state, params, step):
+            # All elementwise math stays in the *state dtype*: upcasting
+            # bf16 moment tensors to f32 materializes full-size f32 copies
+            # of every stacked expert tensor (measured: +80 GB/device on
+            # dbrx-132b).  Bias-correction factors are f32 scalars.
+            t = step.astype(jnp.float32) + 1.0
+            corr1 = 1.0 / (1.0 - b1 ** t)
+            corr2 = 1.0 / (1.0 - b2 ** t)
+            new_m = jax.tree_util.tree_map(
+                lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                state["m"], grads)
+            new_v = jax.tree_util.tree_map(
+                lambda v, g: b2 * v + (1 - b2) * (g.astype(v.dtype) ** 2),
+                state["v"], grads)
+
+            def upd(p, m, v):
+                denom = jnp.sqrt(v * corr2.astype(v.dtype)) + eps
+                step_ = (lr * corr1).astype(m.dtype) * m / denom.astype(m.dtype)
+                out = p - step_.astype(p.dtype)
+                if weight_decay:
+                    out = out - lr * weight_decay * p
+                return out
+
+            new_p = jax.tree_util.tree_map(upd, params, new_m, new_v)
+            return new_p, {"m": new_m, "v": new_v}
+        return Optimizer(init, update, "adam")
+
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,1 @@
+from repro.utils.tree import param_count, tree_bytes, map_leaves  # noqa: F401

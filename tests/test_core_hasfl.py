@@ -1,0 +1,146 @@
+"""Unit tests for the paper's core: latency model, convergence bound,
+BS/MS optimizers, BCD — plus the key HASFL sanity properties."""
+import numpy as np
+import pytest
+
+from repro.config import get_config, SFLConfig, DeviceProfile
+from repro.core.profiles import model_profile
+from repro.core.latency import LatencyModel, sample_devices
+from repro.core.convergence import ConvergenceModel, estimate_constants
+from repro.core.bs_opt import BSProblem, newton_jacobi, solve_bs
+from repro.core.ms_opt import MSProblem
+from repro.core.bcd import HASFLOptimizer
+from repro.core import baselines
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    cfg = get_config("vgg16-cifar")
+    prof = model_profile(cfg)
+    sfl = SFLConfig()
+    devs = sample_devices(20, rng)
+    return cfg, prof, sfl, devs, rng
+
+
+def test_latency_eqn38_structure(setup):
+    _, prof, sfl, devs, _ = setup
+    lat = LatencyModel(prof, devs, sfl)
+    b = np.full(20, 16)
+    cuts = np.full(20, 8)
+    rl = lat.round_latency(b, cuts)
+    # T_S must equal the Eqn-38 composition exactly
+    expect = (np.max(rl.t_f + rl.t_a_up) + rl.t_s_f + rl.t_s_b
+              + np.max(rl.t_g_down + rl.t_b))
+    assert rl.t_split == pytest.approx(expect)
+    assert rl.t_split > 0 and rl.t_agg > 0
+
+
+def test_latency_monotone_in_batch(setup):
+    _, prof, sfl, devs, _ = setup
+    lat = LatencyModel(prof, devs, sfl)
+    cuts = np.full(20, 8)
+    t1 = lat.t_split(np.full(20, 8), cuts)
+    t2 = lat.t_split(np.full(20, 32), cuts)
+    assert t2 > t1
+
+
+def test_convergence_bound_monotonicity(setup):
+    _, prof, sfl, _, _ = setup
+    conv = ConvergenceModel(prof, sfl)
+    b_small, b_big = np.full(20, 4), np.full(20, 64)
+    # larger batch -> smaller variance -> fewer rounds (Insight 1)
+    assert conv.rounds_needed(b_big, 4) < conv.rounds_needed(b_small, 4)
+    # deeper cut -> more drift -> more rounds (Insight 2)
+    assert conv.rounds_needed(b_big, 12) > conv.rounds_needed(b_big, 2)
+
+
+def test_drift_vanishes_at_interval_one(setup):
+    """When I=1 the L_c drift term must be exactly zero (Eqn 16)."""
+    _, prof, _, _, _ = setup
+    sfl1 = SFLConfig(agg_interval=1)
+    conv = ConvergenceModel(prof, sfl1)
+    assert conv.drift_term(10) == 0.0
+
+
+def test_bs_insight1_compensation(setup):
+    """Insight 1: stronger clients take larger batches."""
+    _, prof, sfl, _, rng = setup
+    # two classes of devices: fast and slow
+    fast = DeviceProfile(2e12, 80e6, 380e6, 80e6, 380e6, 8 * 4e9)
+    slow = DeviceProfile(1e12, 75e6, 360e6, 75e6, 360e6, 8 * 4e9)
+    devs = [fast] * 10 + [slow] * 10
+    opt = HASFLOptimizer(prof, devs, sfl)
+    d = opt.solve()
+    assert np.mean(d.b[:10]) >= np.mean(d.b[10:])
+
+
+def test_newton_jacobi_stationarity():
+    prob = BSProblem(a=0.1, b_const=1e-3, c=np.full(5, 1e-4), d=0.5,
+                     kappa=np.full(5, 64.0))
+    b_hat = newton_jacobi(prob)
+    # Xi must vanish at the stationary point
+    assert np.max(np.abs(prob.xi(b_hat))) < 1e-6
+    # integer solution is feasible and no worse than the naive corners
+    b_int = solve_bs(prob)
+    assert np.all(b_int >= 1)
+    assert prob.objective(b_int) <= prob.objective(np.full(5, 1.0))
+    assert prob.objective(b_int) <= prob.objective(np.full(5, 64.0))
+
+
+def test_ms_dinkelbach_beats_random(setup):
+    _, prof, sfl, devs, rng = setup
+    conv = ConvergenceModel(prof, sfl)
+    b = np.full(20, 16.0)
+    ms = MSProblem(prof, devs, sfl, conv, b)
+    cuts = ms.solve()
+    assert cuts.shape == (20,)
+    assert np.all((1 <= cuts) & (cuts <= prof.n_layers))
+    th_opt = ms.theta(cuts)
+    worse = 0
+    for _ in range(10):
+        rand_cuts = rng.integers(1, prof.n_layers + 1, 20)
+        if ms.theta(rand_cuts) >= th_opt - 1e-12:
+            worse += 1
+    assert worse >= 9  # optimal beats (almost) all random draws
+
+
+def test_bcd_monotone_improvement(setup):
+    _, prof, sfl, devs, _ = setup
+    opt = HASFLOptimizer(prof, devs, sfl)
+    d = opt.solve()
+    hist = [h for h in d.history if np.isfinite(h)]
+    assert all(hist[i + 1] <= hist[i] * (1 + 1e-9)
+               for i in range(len(hist) - 1))
+    assert np.isfinite(d.theta)
+
+
+def test_hasfl_beats_all_baselines(setup):
+    """The headline claim: HASFL's objective beats every benchmark policy."""
+    _, prof, sfl, devs, rng = setup
+    opt = HASFLOptimizer(prof, devs, sfl)
+    d = opt.solve()
+    for name in ["rbs+hams", "habs+rms", "rbs+rms", "rbs+rhams"]:
+        b, cuts = baselines.policy(name, opt, rng)
+        assert d.theta <= opt.theta(b, cuts) * 1.001, name
+
+
+def test_estimate_constants_shapes():
+    rng = np.random.default_rng(0)
+    grads = [[rng.standard_normal(10), rng.standard_normal(20)]
+             for _ in range(5)]
+    out = estimate_constants(grads)
+    assert out["g_sq"].shape == (2,)
+    assert out["sigma_sq"].shape == (2,)
+    assert np.all(out["g_sq"] >= out["sigma_sq"] * 0)  # non-negative
+
+
+def test_uniform_devices_uniform_batches(setup):
+    """On a homogeneous cluster HASFL degenerates to ~uniform b_i
+    (the pod sanity property from DESIGN.md §2)."""
+    _, prof, sfl, _, _ = setup
+    dev = DeviceProfile(1.5e12, 77e6, 370e6, 77e6, 370e6, 8 * 4e9)
+    opt = HASFLOptimizer(prof, [dev] * 20, sfl)
+    d = opt.solve()
+    assert np.max(d.b) - np.min(d.b) <= 1
+    assert np.max(d.cuts) == np.min(d.cuts)

@@ -1,0 +1,96 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as REF
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_scan import mlstm_scan
+from repro.kernels.rmsnorm import rmsnorm
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+FLASH_CASES = [
+    # (b, sq, sk, hq, hkv, hd, causal, window, dtype)
+    (1, 128, 128, 4, 2, 64, True, 0, jnp.float32),
+    (2, 64, 256, 8, 8, 32, True, 0, jnp.float32),
+    (1, 96, 96, 4, 1, 128, True, 32, jnp.float32),
+    (1, 128, 128, 2, 2, 64, False, 0, jnp.float32),
+    (1, 200, 200, 3, 1, 64, True, 0, jnp.float32),     # ragged/pad path
+    (1, 128, 128, 4, 2, 64, True, 0, jnp.bfloat16),
+    (2, 32, 512, 4, 4, 64, True, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,hq,hkv,hd,causal,window,dtype", FLASH_CASES)
+def test_flash_attention_vs_ref(b, sq, sk, hq, hkv, hd, causal, window,
+                                dtype):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (b, sq, hq, hd), dtype)
+    k = _rand(rng, (b, sk, hkv, hd), dtype)
+    v = _rand(rng, (b, sk, hkv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = REF.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+MLSTM_CASES = [
+    (1, 64, 2, 32, jnp.float32),
+    (2, 100, 2, 32, jnp.float32),     # pad path (100 % 32 != 0)
+    (1, 96, 4, 64, jnp.float32),
+    (1, 64, 2, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,hd,dtype", MLSTM_CASES)
+def test_mlstm_scan_vs_ref(b, s, h, hd, dtype):
+    rng = np.random.default_rng(1)
+    q, k, v = (_rand(rng, (b, s, h, hd), dtype) for _ in range(3))
+    ig = _rand(rng, (b, s, h), jnp.float32)
+    fg = _rand(rng, (b, s, h), jnp.float32)
+    out = mlstm_scan(q, k, v, ig, fg, chunk=32, interpret=True)
+    ref = REF.mlstm_scan_ref(q, k, v, ig, fg)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+RMSNORM_CASES = [
+    ((4, 128), jnp.float32), ((3, 50, 96), jnp.float32),
+    ((2, 17, 256), jnp.bfloat16), ((1, 1, 512), jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("shape,dtype", RMSNORM_CASES)
+def test_rmsnorm_vs_ref(shape, dtype):
+    rng = np.random.default_rng(2)
+    x = _rand(rng, shape, dtype)
+    sc = jnp.asarray(rng.random(shape[-1]), jnp.float32)
+    out = rmsnorm(x, sc, interpret=True)
+    ref = REF.rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ops_dispatch_cpu_falls_back_to_ref():
+    from repro.kernels import ops
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 32, 2, 32), jnp.float32)
+    k = _rand(rng, (1, 32, 2, 32), jnp.float32)
+    v = _rand(rng, (1, 32, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True)
+    ref = REF.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)

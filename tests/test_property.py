@@ -1,0 +1,129 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_config, SFLConfig, DeviceProfile
+from repro.core.profiles import model_profile
+from repro.core.latency import LatencyModel
+from repro.core.convergence import ConvergenceModel
+from repro.core.bs_opt import BSProblem, newton_jacobi
+from repro.launch.roofline import parse_collectives, _shape_bytes
+
+CFG = get_config("vgg16-cifar")
+PROF = model_profile(CFG)
+SFL = SFLConfig()
+N_LAYERS = PROF.n_layers
+
+
+def _devices(n, f, up, down):
+    return [DeviceProfile(f, up, down, up, down, 8 * 4e9)] * n
+
+
+dev_st = st.tuples(
+    st.floats(5e11, 5e12), st.floats(5e7, 2e8), st.floats(1e8, 8e8))
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.lists(st.integers(1, 64), min_size=3, max_size=8),
+       cut=st.integers(1, N_LAYERS), dev=dev_st)
+def test_latency_positive_and_monotone(b, cut, dev):
+    devs = _devices(len(b), *dev)
+    lat = LatencyModel(PROF, devs, SFL)
+    b = np.asarray(b)
+    cuts = np.full(len(b), cut)
+    t = lat.t_split(b, cuts)
+    assert t > 0
+    # doubling every batch can never reduce the round latency
+    assert lat.t_split(b * 2, cuts) >= t - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(cut=st.integers(1, N_LAYERS - 1), dev=dev_st,
+       b=st.integers(1, 64))
+def test_deeper_cut_shifts_work_to_client(cut, dev, b):
+    devs = _devices(4, *dev)
+    lat = LatencyModel(PROF, devs, SFL)
+    bb = np.full(4, b)
+    r1 = lat.round_latency(bb, np.full(4, cut))
+    r2 = lat.round_latency(bb, np.full(4, cut + 1))
+    # client fwd time is non-decreasing in cut; server fwd non-increasing
+    assert np.all(r2.t_f >= r1.t_f - 1e-12)
+    assert r2.t_s_f <= r1.t_s_f + 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.lists(st.integers(1, 128), min_size=2, max_size=10),
+       l_c=st.integers(1, N_LAYERS))
+def test_bound_decreases_with_rounds(b, l_c):
+    conv = ConvergenceModel(PROF, SFL)
+    b = np.asarray(b)
+    assert conv.bound(b, l_c, 1000) <= conv.bound(b, l_c, 10)
+    # bound is monotone non-increasing in every b_i
+    b2 = b * 2
+    assert conv.variance_term(b2) <= conv.variance_term(b)
+    # drift monotone in L_c
+    if l_c < N_LAYERS:
+        assert conv.drift_term(l_c) <= conv.drift_term(l_c + 1) + 1e-15
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.floats(0.05, 1.0), bc=st.floats(1e-6, 1e-3),
+       c=st.lists(st.floats(1e-5, 1e-2), min_size=2, max_size=6),
+       d=st.floats(0.01, 5.0))
+def test_newton_jacobi_finds_stationary_point(a, bc, c, d):
+    prob = BSProblem(a=a, b_const=bc, c=np.asarray(c), d=d,
+                     kappa=np.full(len(c), 1e6))
+    b_hat = newton_jacobi(prob)
+    assert np.all(b_hat > 0)
+    # denominator feasible and Xi ~ 0 (stationarity) at the solution
+    assert a - np.sum(bc / b_hat) > 0
+    scale = np.maximum(np.abs(prob.c) * a, 1e-9)
+    assert np.max(np.abs(prob.xi(b_hat)) / scale) < 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       dt=st.sampled_from(["f32", "bf16", "s32", "u8"]),
+       op=st.sampled_from(["all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute"]))
+def test_collective_parser_roundtrip(dims, dt, op):
+    """Parser must extract exactly the operand bytes we embed in HLO text."""
+    shape = ",".join(str(d) for d in dims)
+    line = f"  %x.1 = {dt}[{shape}]{{0}} {op}({dt}[{shape}]{{0}} %y.2), replica_groups={{}}"
+    stats = parse_collectives(line)
+    mult = {"all-reduce": 2.0}.get(op, 1.0)
+    assert stats.bytes_by_op[op] == _shape_bytes(dt, shape) * mult
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 8))
+def test_noniid_partition_covers_all_samples(seed, n):
+    from repro.data import partition_noniid_shards
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 200)
+    shards = partition_noniid_shards(labels, n, rng)
+    all_idx = np.sort(np.concatenate(shards))
+    assert len(all_idx) == 200
+    assert len(np.unique(all_idx)) == 200  # disjoint cover
+
+
+@settings(max_examples=10, deadline=None)
+@given(cut=st.integers(1, 3), seed=st.integers(0, 100))
+def test_split_merge_roundtrip(cut, seed):
+    """split_stacked + merge_stacked is the identity on params."""
+    import jax
+    import jax.numpy as jnp
+    from repro.config import reduced
+    from repro.core.split import split_stacked, merge_stacked
+    from repro.models import build_model
+    cfg = reduced(get_config("smollm-135m"), n_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    client, server = split_stacked(params, cut)
+    merged = merge_stacked(client, server)
+    for (p1, l1), (p2, l2) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(merged)[0]):
+        assert p1 == p2
+        assert bool(jnp.array_equal(l1, l2))

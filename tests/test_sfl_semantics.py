@@ -1,0 +1,143 @@
+"""Integration tests of the HASFL training semantics (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced, SFLConfig
+from repro.core.profiles import model_profile
+from repro.core.latency import sample_devices
+from repro.core.sfl import SFLEdgeSimulator, make_hasfl_train_step
+from repro.models import build_model
+from repro.data import make_cifar_like, partition_iid, ClientSampler
+
+
+def _sim(agg_interval=3, n=3, rounds=6, lr=0.05):
+    cfg = get_config("vgg9-cifar-small")
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    (xtr, ytr), (xte, yte) = make_cifar_like(10, 240, 60, 32, seed=3)
+    shards = partition_iid(len(ytr), n, rng)
+    sampler = ClientSampler({"images": xtr, "labels": ytr}, shards, rng)
+    sfl = SFLConfig(n_devices=n, agg_interval=agg_interval, lr=lr)
+    devs = sample_devices(n, rng)
+    prof = model_profile(cfg)
+    sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
+                           devs, sfl, prof, seed=0)
+    return sim
+
+
+def test_edge_sim_aggregation_schedule():
+    """Client units must be equal across clients exactly after every I
+    rounds, and diverge in between; server-common units always equal."""
+    sim = _sim(agg_interval=3, rounds=0)
+
+    def policy(s, rng):
+        return np.full(s.n, 8), np.full(s.n, 3)
+
+    # run manually round by round
+    res = sim.run(policy, rounds=3, eval_every=3)
+    l_c_units = 3
+    # after round 3 (== I), client prefix units identical
+    for u in range(l_c_units):
+        a = jax.tree_util.tree_leaves(sim.client_units[0][u])[0]
+        b = jax.tree_util.tree_leaves(sim.client_units[1][u])[0]
+        assert bool(jnp.allclose(a, b))
+
+
+def test_edge_sim_learns():
+    sim = _sim(agg_interval=5)
+
+    def policy(s, rng):
+        return np.full(s.n, 16), np.full(s.n, 4)
+
+    res = sim.run(policy, rounds=30, eval_every=15)
+    assert res.test_acc[-1] > 0.3          # well above 10% chance
+    assert res.clock[-1] > 0
+
+
+def test_edge_sim_clock_advances_with_agg():
+    sim1 = _sim(agg_interval=1000)  # never aggregates within run
+    sim2 = _sim(agg_interval=2)
+
+    def policy(s, rng):
+        return np.full(s.n, 8), np.full(s.n, 3)
+
+    r1 = sim1.run(policy, rounds=6, eval_every=6)
+    r2 = sim2.run(policy, rounds=6, eval_every=6)
+    assert r2.clock[-1] > r1.clock[-1]     # aggregation costs latency
+
+
+def test_spmd_step_aggregates_every_interval():
+    cfg = reduced(get_config("smollm-135m"), n_layers=4)
+    model = build_model(cfg)
+    init_state, train_step = make_hasfl_train_step(
+        model, n_clients=2, cut_reps=1, agg_interval=3,
+        optimizer_name="sgd", lr=1e-2)
+    state = init_state(jax.random.PRNGKey(0))
+    step = jax.jit(train_step)
+    rng = np.random.default_rng(0)
+    equal_flags = []
+    for t in range(6):
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (2, 2, 16))),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                    (2, 2, 16)))}
+        state, m = step(state, batch)
+        leaf = jax.tree_util.tree_leaves(state["client"])[0]
+        equal_flags.append(bool(jnp.allclose(leaf[0], leaf[1])))
+    assert equal_flags == [False, False, True, False, False, True]
+
+
+def test_spmd_grad_accum_equivalence():
+    """grad_accum=2 must produce the same update as grad_accum=1."""
+    cfg = reduced(get_config("smollm-135m"), n_layers=2)
+    model = build_model(cfg)
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 4, 16))),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 4, 16)))}
+    outs = []
+    for accum in (1, 2):
+        init_state, train_step = make_hasfl_train_step(
+            model, n_clients=2, cut_reps=1, agg_interval=10,
+            optimizer_name="sgd", lr=1e-2, grad_accum=accum, remat=False)
+        state = init_state(jax.random.PRNGKey(7))
+        state, _ = jax.jit(train_step)(state, batch)
+        outs.append(state)
+    l1 = jax.tree_util.tree_leaves(outs[0]["client"])
+    l2 = jax.tree_util.tree_leaves(outs[1]["client"])
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_optimizers_reduce_loss():
+    from repro.training.optim import make_optimizer
+    # quadratic bowl
+    target = jnp.asarray([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p - target) ** 2)
+
+    for name in ["sgd", "momentum", "adam"]:
+        opt = make_optimizer(name, lr=0.1)
+        p = jnp.zeros(3)
+        state = opt.init(p)
+        for t in range(200):
+            g = jax.grad(loss)(p)
+            p, state = opt.update(g, state, p, jnp.asarray(t))
+        assert float(loss(p)) < 1e-2, name
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.training.checkpoint import save_checkpoint, restore_checkpoint
+    tree = {"a": jnp.arange(5, dtype=jnp.float32),
+            "b": [jnp.ones((2, 2)), jnp.zeros(3)]}
+    save_checkpoint(str(tmp_path), tree, step=7)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored, step = restore_checkpoint(str(tmp_path), like)
+    assert step == 7
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,70 @@
+"""End-to-end behaviour tests for the HASFL system."""
+import numpy as np
+import pytest
+
+from repro.config import get_config, SFLConfig
+from repro.core.profiles import model_profile
+from repro.core.latency import sample_devices
+from repro.core.sfl import SFLEdgeSimulator
+from repro.core.bcd import HASFLOptimizer
+from repro.core import baselines
+from repro.models import build_model
+from repro.data import make_cifar_like, partition_noniid_shards, ClientSampler
+
+
+def test_end_to_end_hasfl_vs_random_policy():
+    """Full pipeline: data -> BCD controller -> split training -> metrics.
+
+    HASFL's per-round effective latency must beat the random policy while
+    reaching comparable accuracy (the paper's headline behaviour, scaled
+    down to CPU).
+    """
+    cfg = get_config("vgg9-cifar-small")
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    n = 4
+    (xtr, ytr), (xte, yte) = make_cifar_like(10, 600, 150, 32, seed=1)
+    shards = partition_noniid_shards(ytr, n, rng)
+    sfl = SFLConfig(n_devices=n, agg_interval=5, lr=0.05)
+    prof = model_profile(cfg)
+    devs = sample_devices(n, rng)
+    opt = HASFLOptimizer(prof, devs, sfl)
+
+    results = {}
+    for name in ["hasfl", "rbs+rms"]:
+        sampler = ClientSampler({"images": xtr, "labels": ytr}, shards,
+                                np.random.default_rng(7))
+        sim = SFLEdgeSimulator(model, sampler,
+                               {"images": xte, "labels": yte},
+                               devs, sfl, prof, seed=0)
+
+        def policy(s, prng, _name=name):
+            return baselines.policy(_name, opt, prng)
+
+        results[name] = sim.run(policy, rounds=40, eval_every=10)
+
+    r_h, r_r = results["hasfl"], results["rbs+rms"]
+    # HASFL must actually learn
+    assert r_h.test_acc[-1] > 0.25
+    # and its estimated latency-to-convergence objective must beat random
+    # (HASFL may spend MORE per round to need far fewer rounds, so the
+    # fixed-round clock is not the right comparison — Theta is).
+    from benchmarks.common import robust_theta
+    th_h = robust_theta(opt, r_h.b_history[-1], r_h.cut_history[-1])
+    th_r = robust_theta(opt, r_r.b_history[-1], r_r.cut_history[-1])
+    assert th_h <= th_r * 1.001
+    # both clocks advanced
+    assert r_h.clock[-1] > 0 and r_r.clock[-1] > 0
+
+
+def test_policy_decisions_respect_constraints():
+    cfg = get_config("vgg16-cifar")
+    prof = model_profile(cfg)
+    rng = np.random.default_rng(0)
+    sfl = SFLConfig()
+    devs = sample_devices(20, rng)
+    opt = HASFLOptimizer(prof, devs, sfl)
+    d = opt.solve()
+    assert np.all(d.b >= 1) and np.all(d.b <= sfl.max_batch)
+    assert np.all((d.cuts >= 1) & (d.cuts <= prof.n_layers))
+    assert opt.lat.feasible(d.b, d.cuts)   # memory constraint C4
