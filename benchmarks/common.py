@@ -34,7 +34,7 @@ def full_profile(arch: str = "vgg16-cifar"):
 
 def make_sim(*, n_clients=8, iid=False, agg_interval=15, lr=0.05,
              n_train=1200, n_test=300, seed=0, arch="vgg9-cifar-small",
-             n_classes=10):
+             n_classes=10, vectorized=True):
     cfg = get_config(arch)
     model = build_model(cfg)
     rng = np.random.default_rng(seed)
@@ -49,7 +49,7 @@ def make_sim(*, n_clients=8, iid=False, agg_interval=15, lr=0.05,
     prof = model_profile(cfg)
     devs = sample_devices(n_clients, rng)
     sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
-                           devs, sfl, prof, seed=seed)
+                           devs, sfl, prof, seed=seed, vectorized=vectorized)
     opt = HASFLOptimizer(prof, devs, sfl)
     return sim, opt
 

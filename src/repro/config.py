@@ -231,6 +231,9 @@ class SFLConfig:
     server_flops: float = 20e12     # f_s
     server_fed_bw: float = 370e6    # r_{s,f} / r_{f,s}, bit/s
     max_batch: int = 64             # B cap used by baselines / search
+    clip_norm: float = 1.0          # per-client grad clip (0 = off); plain
+                                    # SGD at the paper's gamma intermittently
+                                    # diverges on small batches (DESIGN.md §2)
     epsilon: float = 0.1            # target avg squared grad norm
     # Assumption-2 constants (estimated online; these are priors)
     beta: float = 0.05

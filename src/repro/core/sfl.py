@@ -64,10 +64,42 @@ class SimResult:
         return self.clock[-1] if self.clock else float("inf")
 
 
+def clip_by_global_norm(grads, clip: float):
+    """Scale a gradient tree so its global L2 norm is at most ``clip``.
+
+    Applied per client before any HASFL update: plain SGD at the paper's
+    gamma intermittently diverges on small per-client batches (loss spikes
+    measured on the CPU-scale runs — DESIGN.md §2), and both execution
+    paths must stabilize identically for the vectorized==legacy regression
+    to hold.  ``clip=0`` disables.
+    """
+    if not clip:
+        return grads
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype),
+                                  grads)
+
+
 class SFLEdgeSimulator:
+    """Paper-faithful edge simulation with two equivalent round engines.
+
+    ``vectorized=True`` (default) keeps one [N, ...]-stacked copy of every
+    cuttable unit and runs each round as a single jitted step: a vmapped
+    per-client grad, the Eq. 4 server-common mean update, the Eq. 5-6
+    client-specific updates, and the every-I Eq. 7 aggregation folded in as
+    a ``jnp.where`` on a traced flag (the same idiom as the SPMD pod step).
+    ``vectorized=False`` preserves the original per-client Python loop —
+    the reference for the equivalence regression test and the
+    ``benchmarks/sim_speed.py`` comparison.
+    """
+
     def __init__(self, model: Model, sampler, test_batch: dict,
                  devices: Sequence[DeviceProfile], sfl: SFLConfig,
-                 profile: LayerProfile, seed: int = 0):
+                 profile: LayerProfile, seed: int = 0,
+                 vectorized: bool = True):
         self.model = model
         self.cfg = model.cfg
         self.sampler = sampler
@@ -78,17 +110,45 @@ class SFLEdgeSimulator:
         self.lat = LatencyModel(profile, devices, sfl)
         self.n = len(devices)
         self.rng = np.random.default_rng(seed)
+        self.vectorized = bool(vectorized)
 
         params = model.init(jax.random.PRNGKey(seed))
         units, self.rebuild = SP.to_units(self.cfg, params)
         self.units = units
         # per-client copies of every *cuttable* unit; shared tail managed by
         # L_c at update time.  Memory: N copies of a small model (sim only).
-        self.client_units = [jax.tree_util.tree_map(jnp.copy, units)
-                             for _ in range(self.n)]
+        if self.vectorized:
+            self._stacked = SP.replicate_units(units, self.n)
+        else:
+            self._client_units = [jax.tree_util.tree_map(jnp.copy, units)
+                                  for _ in range(self.n)]
 
-        self._grad_fn = jax.jit(jax.value_and_grad(self._loss, has_aux=True))
+        def _clipped_grad(units, batch):
+            (loss, aux), g = jax.value_and_grad(
+                self._loss, has_aux=True)(units, batch)
+            return (loss, aux), clip_by_global_norm(g, self.sfl.clip_norm)
+
+        # clip inside the jitted grad so the legacy engine pays no eager
+        # per-client dispatch the vectorized engine doesn't
+        self._grad_fn = jax.jit(_clipped_grad)
         self._eval_fn = jax.jit(self._eval)
+        self._round_fn = jax.jit(self._vectorized_round)
+
+    @property
+    def client_units(self):
+        """Per-client unit lists.
+
+        When vectorized this is a read-only snapshot unstacked from the
+        [N, ...] representation, returned as nested tuples so that
+        item-assignment (which could never write back to the stacked
+        state) raises instead of silently no-opping; construct with
+        ``vectorized=False`` to patch client parameters in place.
+        """
+        if self.vectorized:
+            return tuple(tuple(units)
+                         for units in SP.unstack_unit_trees(self._stacked,
+                                                            self.n))
+        return self._client_units
 
     # -- loss over unit list -------------------------------------------------
     def _loss(self, units, batch):
@@ -121,6 +181,100 @@ class SFLEdgeSimulator:
             return list(range(l_c_units))
         return list(range(0, l_c_units + 1))   # embed + first l_c reps
 
+    # -- round engines --------------------------------------------------------
+    def _vectorized_round(self, stacked, batch, masks, do_agg):
+        """One HASFL round over [N, ...]-stacked units (jitted).
+
+        Fuses: vmapped per-client grads (with per-client clipping), the
+        Eq. 4 server-common mean update, the Eq. 5-6 client-specific
+        updates, and the Eq. 7 every-I aggregation — unit membership and
+        the aggregation flag are traced, so one executable covers every
+        (cut, round) combination at a given batch shape.
+        """
+        gamma = self.sfl.lr
+        clip = self.sfl.clip_norm
+
+        def per_client(units, b):
+            (loss, _), g = jax.value_and_grad(
+                self._loss, has_aux=True)(units, b)
+            return loss, clip_by_global_norm(g, clip)
+
+        losses, grads = jax.vmap(per_client)(stacked, batch)
+
+        new_stacked = []
+        for u, (p_u, g_u) in enumerate(zip(stacked, grads)):
+            m = masks[u]
+
+            def upd(p, g, m=m):
+                # Eq. 4: server-common — mean grad applied to the common
+                # copy (the client mean; identical to any single copy while
+                # the equal-across-clients invariant holds, and the correct
+                # base when a reconfiguration moves a diverged unit to the
+                # server side).
+                mean_g = g.mean(axis=0)
+                common = p.mean(axis=0) - gamma * mean_g.astype(p.dtype)
+                # Eq. 5-6: client-specific — per-client SGD
+                spec = p - gamma * g.astype(p.dtype)
+                return jnp.where(m > 0, spec,
+                                 jnp.broadcast_to(common[None], p.shape))
+
+            new_u = jax.tree_util.tree_map(upd, p_u, g_u)
+            # Eq. 7: every-I aggregation of client-specific units only
+            new_stacked.append(SP.aggregate_where(
+                new_u, jnp.logical_and(do_agg, m > 0)))
+        return new_stacked, losses
+
+    def _legacy_round(self, b, cuts, client_idx, do_agg):
+        """The original per-client Python loop (seed implementation) —
+        kept as the reference engine for the equivalence regression and
+        the sim_speed benchmark."""
+        gamma = self.sfl.lr
+        b_max = int(np.max(b))
+        losses = []
+        grads_all = []
+        for i in range(self.n):
+            batch = self.sampler.sample(i, int(b[i]), pad_to=b_max)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            (loss, _), g = self._grad_fn(self._client_units[i], batch)
+            losses.append(float(loss))
+            grads_all.append(g)
+
+        # server-common units (> L_c): averaged update, every round (Eq.4).
+        # Base = client mean, matching the vectorized engine (identical to
+        # any single copy while the units are synchronized; correct when a
+        # reconfiguration moves a still-diverged unit to the server side).
+        for u in range(len(self.units)):
+            if u in client_idx:
+                continue
+            mean_g = jax.tree_util.tree_map(
+                lambda *gs: sum(gs) / self.n,
+                *[grads_all[i][u] for i in range(self.n)])
+            mean_p = jax.tree_util.tree_map(
+                lambda *xs: sum(xs) / self.n,
+                *[self._client_units[i][u] for i in range(self.n)])
+            new_common = jax.tree_util.tree_map(
+                lambda p, g: p - gamma * g.astype(p.dtype),
+                mean_p, mean_g)
+            for i in range(self.n):
+                self._client_units[i][u] = new_common
+
+        # client-specific units (<= L_c): individual updates (Eq.5-6)
+        for i in range(self.n):
+            for u in client_idx:
+                self._client_units[i][u] = jax.tree_util.tree_map(
+                    lambda p, g: p - gamma * g.astype(p.dtype),
+                    self._client_units[i][u], grads_all[i][u])
+
+        # client-side aggregation stage, every I (Eq.7)
+        if do_agg:
+            for u in client_idx:
+                mean_u = jax.tree_util.tree_map(
+                    lambda *xs: sum(xs) / self.n,
+                    *[self._client_units[i][u] for i in range(self.n)])
+                for i in range(self.n):
+                    self._client_units[i][u] = mean_u
+        return losses
+
     # -- main loop ------------------------------------------------------------
     def run(self, policy_fn: Callable, rounds: int, eval_every: int = 10,
             reconfigure_every: Optional[int] = None,
@@ -132,55 +286,30 @@ class SFLEdgeSimulator:
         b, cuts = policy_fn(self, self.rng)
         res.b_history.append(np.asarray(b).copy())
         res.cut_history.append(np.asarray(cuts).copy())
-        gamma = self.sfl.lr
         n_units_total = len(self.units)
 
         for t in range(1, rounds + 1):
             ucuts = self._unit_cuts(np.asarray(cuts))
             l_c_units = int(np.max(ucuts))
-            client_idx = self._client_slice(l_c_units)
+            do_agg = (t % self.sfl.agg_interval) == 0
 
-            # --- split-training round (a1-a5) -----------------------------
-            b_max = int(np.max(b))
-            losses = []
-            grads_all = []
-            for i in range(self.n):
-                batch = self.sampler.sample(i, int(b[i]), pad_to=b_max)
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                (loss, _), g = self._grad_fn(self.client_units[i], batch)
-                losses.append(float(loss))
-                grads_all.append(g)
-
-            # server-common units (> L_c): averaged update, every round (Eq.4)
-            for u in range(n_units_total):
-                if u in client_idx:
-                    continue
-                mean_g = jax.tree_util.tree_map(
-                    lambda *gs: sum(gs) / self.n,
-                    *[grads_all[i][u] for i in range(self.n)])
-                new_common = jax.tree_util.tree_map(
-                    lambda p, g: p - gamma * g.astype(p.dtype),
-                    self.client_units[0][u], mean_g)
-                for i in range(self.n):
-                    self.client_units[i][u] = new_common
-
-            # client-specific units (<= L_c): individual updates (Eq.5-6)
-            for i in range(self.n):
-                for u in client_idx:
-                    self.client_units[i][u] = jax.tree_util.tree_map(
-                        lambda p, g: p - gamma * g.astype(p.dtype),
-                        self.client_units[i][u], grads_all[i][u])
+            # --- split-training round (a1-a5) + every-I stage (b1-b3) -----
+            if self.vectorized:
+                b_max = int(np.max(b))
+                per = [self.sampler.sample(i, int(b[i]), pad_to=b_max)
+                       for i in range(self.n)]
+                batch = {k: jnp.asarray(np.stack([p[k] for p in per]))
+                         for k in per[0]}
+                masks = jnp.asarray(SP.client_unit_mask(
+                    self.cfg, n_units_total, l_c_units))
+                self._stacked, losses = self._round_fn(
+                    self._stacked, batch, masks, jnp.asarray(do_agg))
+            else:
+                client_idx = self._client_slice(l_c_units)
+                losses = self._legacy_round(b, cuts, client_idx, do_agg)
 
             clock += self.lat.t_split(b, cuts)
-
-            # --- client-side aggregation stage (b1-b3), every I (Eq.7) ----
-            if t % self.sfl.agg_interval == 0:
-                for u in client_idx:
-                    mean_u = jax.tree_util.tree_map(
-                        lambda *xs: sum(xs) / self.n,
-                        *[self.client_units[i][u] for i in range(self.n)])
-                    for i in range(self.n):
-                        self.client_units[i][u] = mean_u
+            if do_agg:
                 clock += self.lat.t_agg(b, cuts)
 
             # --- reconfiguration (Algorithm 1 line 23) --------------------
@@ -195,19 +324,21 @@ class SFLEdgeSimulator:
                 tl, ta = self._eval_fn(agg, self.test_batch)
                 res.rounds.append(t)
                 res.clock.append(clock)
-                res.train_loss.append(float(np.mean(losses)))
+                res.train_loss.append(float(np.mean(np.asarray(losses))))
                 res.test_loss.append(float(tl))
                 res.test_acc.append(float(ta))
                 if verbose:
                     print(f"round {t:5d} clock {clock:9.1f}s "
-                          f"loss {np.mean(losses):.4f} acc {float(ta):.4f}",
-                          flush=True)
+                          f"loss {np.mean(np.asarray(losses)):.4f} "
+                          f"acc {float(ta):.4f}", flush=True)
         return res
 
     def _aggregate_model(self):
         """Virtual aggregated model w̄ (analysis object, Sec. IV)."""
+        if self.vectorized:
+            return SP.mean_unit_trees(self._stacked)
         return [jax.tree_util.tree_map(lambda *xs: sum(xs) / self.n,
-                                       *[self.client_units[i][u]
+                                       *[self._client_units[i][u]
                                          for i in range(self.n)])
                 for u in range(len(self.units))]
 
@@ -222,11 +353,6 @@ def make_hasfl_train_step(model: Model, *, n_clients: int, cut_reps: int,
                           grad_accum: int = 1, remat: bool = True,
                           shard_fn=None, unroll: bool = False,
                           param_shardings=None, rep_shard_fn=None):
-    """``param_shardings``: optional ({client shardings}, {server
-    shardings}) NamedSharding trees; when given, accumulated gradients are
-    explicitly constrained to the parameter layout (the
-    optimization_barrier between microbatches blocks GSPMD propagation,
-    which otherwise leaves the big MoE grad buffers unsharded)."""
     """Build (init_state, train_step) for the production SPMD path.
 
     State: {"client": per-client stacked prefix [N, ...], "server": suffix,
@@ -236,6 +362,12 @@ def make_hasfl_train_step(model: Model, *, n_clients: int, cut_reps: int,
     Semantics per HASFL: server part's gradient is the client-mean (Eq. 4,
     every step); client parts take their own gradients (Eq. 5-6) and are
     averaged every ``agg_interval`` steps (Eq. 7) inside the step.
+
+    ``param_shardings``: optional ({client shardings}, {server shardings})
+    NamedSharding trees; when given, accumulated gradients are explicitly
+    constrained to the parameter layout (the optimization_barrier between
+    microbatches blocks GSPMD propagation, which otherwise leaves the big
+    MoE grad buffers unsharded).
     """
     opt = make_optimizer(optimizer_name, lr, state_dtype=optimizer_dtype)
 
@@ -328,18 +460,11 @@ def make_hasfl_train_step(model: Model, *, n_clients: int, cut_reps: int,
         new_params, new_opt = opt.update(grads, state["opt"], params,
                                          state["step"])
 
-        # every-I aggregation of the client-stacked prefix (Eq. 7)
+        # every-I aggregation of the client-stacked prefix (Eq. 7) — the
+        # same traced-select idiom as the vectorized edge simulator
         step1 = state["step"] + 1
         do_agg = (step1 % agg_interval) == 0
-
-        def agg(tree):
-            return jax.tree_util.tree_map(
-                lambda a: jnp.where(
-                    do_agg,
-                    jnp.broadcast_to(a.mean(axis=0, keepdims=True), a.shape),
-                    a), tree)
-
-        new_client = agg(new_params["client"])
+        new_client = SP.aggregate_where(new_params["client"], do_agg)
         return {"client": new_client, "server": new_params["server"],
                 "opt": new_opt, "step": step1}, {"loss": loss}
 

@@ -18,6 +18,7 @@ from typing import Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig, CNN
 from repro.models.transformer import layer_program, stack_params, unstack_params
@@ -84,6 +85,68 @@ def split_units(units: list, cut_units: int, cfg: ModelConfig):
 
 def merge_units(client_units: list, server_units: list) -> list:
     return list(client_units) + list(server_units)
+
+
+# ---------------------------------------------------------------------------
+# Stacked unit lists (vectorized edge simulator)
+# ---------------------------------------------------------------------------
+#
+# The simulator and the SPMD pod path share this vocabulary: client-stacked
+# leaves carry a leading N axis, updates are expressed once per unit over
+# all clients, and the every-I aggregation is the same jnp.where idiom in
+# both runtimes (`aggregate_where`).
+
+def stack_unit_trees(client_units: list) -> list:
+    """list[N] of list[U] unit trees -> list[U] of [N, ...]-stacked trees."""
+    n = len(client_units)
+    return [jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[client_units[i][u] for i in range(n)])
+        for u in range(len(client_units[0]))]
+
+
+def unstack_unit_trees(stacked: list, n: int) -> list:
+    """Inverse of stack_unit_trees: per-client unit lists (views)."""
+    return [[jax.tree_util.tree_map(lambda a, i=i: a[i], u) for u in stacked]
+            for i in range(n)]
+
+
+def replicate_units(units: list, n: int) -> list:
+    """Stack N identical copies of a unit list along a leading client axis."""
+    return [jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), u)
+        for u in units]
+
+
+def mean_unit_trees(stacked: list) -> list:
+    """Client-mean of every unit — the virtual aggregated model w̄."""
+    return [jax.tree_util.tree_map(lambda a: a.mean(axis=0), u)
+            for u in stacked]
+
+
+def client_unit_mask(cfg: ModelConfig, n_units: int, l_c_units: int):
+    """1.0 for client-specific (every-I) units, 0.0 for server-common.
+
+    CNNs: the first ``l_c_units`` layers.  Transformers: the embedding plus
+    the first ``l_c_units`` repetitions (the head unit is always server).
+    """
+    mask = np.zeros((n_units,), np.float32)
+    if cfg.family == CNN:
+        mask[:l_c_units] = 1.0
+    else:
+        mask[:l_c_units + 1] = 1.0
+    return mask
+
+
+def aggregate_where(tree, do_agg):
+    """Every-I aggregation (Eq. 7) as a traced select: when ``do_agg``,
+    replace each [N, ...] leaf with its client mean broadcast back over N.
+    Used by both the SPMD train step and the vectorized simulator."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.where(
+            do_agg,
+            jnp.broadcast_to(a.mean(axis=0, keepdims=True), a.shape),
+            a), tree)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,8 @@
+"""Distributed-execution layer: sharding inference for the SPMD runtime.
+
+``repro.dist.sharding`` turns pytrees of ShapeDtypeStructs (train state,
+batches, decode caches) into NamedSharding trees for any mesh the launch
+layer builds (host, single-pod, multi-pod), and provides the activation /
+per-repetition weight constraint hooks the model forward passes accept.
+"""
+from repro.dist import sharding  # noqa: F401

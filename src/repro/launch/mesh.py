@@ -21,3 +21,22 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh):
+    """The data-parallel mesh axes: ("pod", "data") on the multi-pod
+    production mesh, "data" on single-pod / host meshes.  Returned in the
+    form PartitionSpec entries expect (a name or tuple of names)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def axis_size(mesh, axes) -> int:
+    """Total device count across `axes` (a name, tuple of names, or None)."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    return size

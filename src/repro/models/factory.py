@@ -255,29 +255,34 @@ def _build_transformer(cfg: ModelConfig) -> Model:
     def init_cache(batch, cache_len, window=None):
         return T.cache_init(cfg, batch, cache_len, window)
 
-    def prefill(params, batch, cache_len=None, window=None, unroll=False):
+    def prefill(params, batch, cache_len=None, window=None, unroll=False,
+                shard_fn=None):
         tokens = batch["tokens"]
         b, s = tokens.shape
         cache_len = cache_len or s
         cache = T.cache_init(cfg, b, cache_len, window)
         x = _embed_inputs(params, batch)
-        ctx = {"positions": jnp.arange(s)[None, :], "unroll": unroll}
+        ctx = {"positions": jnp.arange(s)[None, :], "unroll": unroll,
+               "shard_fn": shard_fn}
         if window is not None:
             ctx["window"] = window
         if cfg.is_enc_dec:
-            ctx["enc_out"] = _encode(params, batch["frame_embeddings"])
+            ctx["enc_out"] = _encode(params, batch["frame_embeddings"],
+                                     shard_fn)
         x, cache = T.stack_prefill(params["stack"], cache, x, cfg, program,
                                    ctx)
         return _logits(params, x[:, -1:]), cache
 
-    def decode_step(params, cache, batch, window=None, unroll=False):
+    def decode_step(params, cache, batch, window=None, unroll=False,
+                    shard_fn=None):
         tokens, positions = batch["tokens"], batch["positions"]
         x = params["embed"][tokens]                 # [B, 1, d]
         if cfg.is_enc_dec and cfg.rope_theta <= 0:
             pos_table = jnp.asarray(
                 L.sinusoidal_positions(8192, cfg.d_model), dtype)
             x = x + pos_table[jnp.clip(positions, 0, 8191)][:, None]
-        ctx = {"positions": positions, "unroll": unroll}
+        ctx = {"positions": positions, "unroll": unroll,
+               "shard_fn": shard_fn}
         if window is not None:
             ctx["window"] = window
         x, cache = T.stack_decode(params["stack"], cache, x, cfg, program,

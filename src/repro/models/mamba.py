@@ -84,7 +84,14 @@ def mamba_decode_init(batch: int, d_in: int, state_dim: int, conv_dim: int):
 
 
 def mamba_block_decode(params, x, state, *, state_dim: int, eps: float = 1e-5):
-    """Single-token step. x: [B, 1, d]."""
+    """Single-token step. x: [B, 1, d].
+
+    Dtype handling mirrors ``mamba_block`` exactly (streams in the compute
+    dtype, state/update math in f32): the full-sequence path rounds the
+    conv output, ``bc`` and ``dt`` through the compute dtype, and keeping
+    those f32 here lets the recurrent state drift past the
+    decode==full-forward tolerance after a few steps.
+    """
     b, _, d = x.shape
     xn = rmsnorm(x, params["norm_in"], eps)
     xz = (xn @ params["w_in"])[:, 0]
@@ -93,14 +100,19 @@ def mamba_block_decode(params, x, state, *, state_dim: int, eps: float = 1e-5):
     hist = jnp.concatenate([state["conv"], x1[:, None].astype(jnp.float32)],
                            axis=1)                     # [B, K, d_in]
     conv = jnp.einsum("bkc,kc->bc", hist, params["conv_w"]) + params["conv_b"]
-    x1c = jax.nn.silu(conv)
-    bc = x1c @ params["w_bc"]
+    x1c = jax.nn.silu(conv).astype(x.dtype)
+    bc = x1c @ params["w_bc"].astype(x.dtype)
     b_t, c_t = jnp.split(bc, 2, axis=-1)
-    dt = jax.nn.softplus(x1c @ params["w_dt"] + params["b_dt"])
+    dt = jax.nn.softplus(x1c.astype(jnp.float32) @ params["w_dt"]
+                         + params["b_dt"]).astype(x.dtype)
     a = -jnp.exp(params["a_log"])
-    da = jnp.exp(dt[..., None] * a)
-    ssm = da * state["ssm"] + (dt * x1c)[..., None] * b_t[:, None, :]
-    y = jnp.einsum("bdn,bn->bd", ssm, c_t) + params["d_skip"] * x1c
-    y = y.astype(x.dtype) * jax.nn.silu(z)
+    x_f = x1c.astype(jnp.float32)
+    dt_f = dt.astype(jnp.float32)
+    da = jnp.exp(dt_f[..., None] * a)
+    ssm = da * state["ssm"] + (dt_f * x_f)[..., None] \
+        * b_t.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", ssm, c_t.astype(jnp.float32)) \
+        .astype(x.dtype) + (params["d_skip"] * x_f).astype(x.dtype)
+    y = y * jax.nn.silu(z)
     out = (y @ params["w_out"])[:, None]
     return out, {"ssm": ssm, "conv": hist[:, 1:]}

@@ -375,6 +375,7 @@ def stack_decode(stacked: dict, caches: dict, x: jax.Array, cfg: ModelConfig,
                  program, ctx: dict):
     def body(x, xs):
         rep_params, rep_cache = xs
+        shard = ctx.get("shard_fn")
         new_cache = {}
         for li, layer in enumerate(program):
             lc = {}
@@ -386,6 +387,8 @@ def stack_decode(stacked: dict, caches: dict, x: jax.Array, cfg: ModelConfig,
                 x = x + delta
                 if cache_b is not None:
                     lc[key] = new_c
+            if shard is not None:
+                x = shard(x)
             new_cache[f"l{li}"] = lc
         return x, new_cache
 
@@ -450,6 +453,9 @@ def stack_prefill(stacked: dict, caches: dict, x: jax.Array, cfg: ModelConfig,
                         # replaying the last ctx window in decode tests.
                         lc[key] = cache_b
                 x = x + delta
+            shard = ctx.get("shard_fn")
+            if shard is not None:
+                x = shard(x)
             new_cache[f"l{li}"] = lc
         return x, new_cache
 

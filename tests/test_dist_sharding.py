@@ -1,0 +1,187 @@
+"""Unit tests for the repro.dist sharding layer beyond the lowering tests,
+plus the vectorized-vs-seed simulator equivalence regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, reduced, SFLConfig
+from repro.core.latency import sample_devices
+from repro.core.profiles import model_profile
+from repro.core.sfl import SFLEdgeSimulator, make_hasfl_train_step
+from repro.core import split as SP
+from repro.data import make_cifar_like, partition_iid, ClientSampler
+from repro.dist.sharding import (auto_param_spec, batch_shardings,
+                                 state_shardings)
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+
+
+class _FakeMesh:
+    """Duck-typed mesh (shape + axis_names) so spec inference can be tested
+    against production-sized meshes on a 1-device host."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+PROD_SINGLE = _FakeMesh({"data": 16, "model": 16})
+PROD_MULTI = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+ADVERSARIAL_SHAPES = [
+    (),                      # scalar
+    (1,),                    # length-1 vector
+    (3,),                    # odd vector
+    (9, 64),                 # odd head count x divisible dim
+    (14, 96),                # both non-divisible by 16
+    (17, 17),                # prime x prime
+    (5120, 202048),          # big ragged vocab-ish
+    (2, 3, 5, 7),            # all-prime 4-D
+    (32, 1, 16),             # inner length-1
+    (48, 48),                # divisible by 16 but not 256
+]
+
+
+@pytest.mark.parametrize("mesh", [PROD_SINGLE, PROD_MULTI],
+                         ids=["single", "multi"])
+@pytest.mark.parametrize("shape", ADVERSARIAL_SHAPES,
+                         ids=[str(s) for s in ADVERSARIAL_SHAPES])
+def test_auto_spec_never_invalid(mesh, shape):
+    for kw in ({}, {"expert": True}, {"skip": 1}):
+        spec = auto_param_spec(shape, mesh, **kw)
+        assert len(spec) == len(shape)
+        for dim, name in zip(shape, spec):
+            if name is None:
+                continue
+            axes = name if isinstance(name, tuple) else (name,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (shape, kw, spec)
+
+
+def test_auto_spec_prefers_largest_divisible_dims():
+    spec = auto_param_spec((64, 4096), PROD_SINGLE)
+    assert spec[1] == "model"          # largest dim -> tensor parallel
+    assert spec[0] == "data"           # remaining -> FSDP
+    # multi-pod dp is the ("pod", "data") tuple
+    spec = auto_param_spec((64, 4096), PROD_MULTI)
+    assert spec[1] == "model"
+    assert spec[0] == ("pod", "data")
+
+
+def test_expert_spec_layout():
+    # stacked expert tensor [R, E, d, d_ff]: E over model, d over data
+    spec = auto_param_spec((4, 16, 4096, 14336), PROD_SINGLE, expert=True)
+    assert tuple(spec) == (None, "model", "data", None)
+    # non-divisible expert count falls back to replicated E
+    spec = auto_param_spec((4, 6, 4096, 14336), PROD_SINGLE, expert=True)
+    assert spec[1] is None
+
+
+def test_state_shardings_client_axis_and_step():
+    cfg = reduced(get_config("smollm-135m"), n_layers=4)
+    model = build_model(cfg)
+    init_state, _ = make_hasfl_train_step(model, n_clients=2, cut_reps=1,
+                                          agg_interval=3)
+    structs = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+    sh = state_shardings(structs, mesh)
+    # identical tree structure; every leaf a NamedSharding
+    jax.tree_util.tree_map(lambda s, x: s.shard_shape(x.shape), sh, structs)
+    assert sh["step"].spec == ()
+    # batch leaves: leading axis rule only
+    bsh = batch_shardings({"tokens": jax.ShapeDtypeStruct((2, 4, 8),
+                                                          jnp.int32)}, mesh)
+    assert len(bsh["tokens"].spec) <= 3
+
+
+def _make_sim(vectorized, n=4, agg=3):
+    cfg = get_config("vgg9-cifar-small")
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    (xtr, ytr), (xte, yte) = make_cifar_like(10, 240, 60, 32, seed=3)
+    shards = partition_iid(len(ytr), n, np.random.default_rng(1))
+    sampler = ClientSampler({"images": xtr, "labels": ytr}, shards,
+                            np.random.default_rng(2))
+    sfl = SFLConfig(n_devices=n, agg_interval=agg, lr=0.05)
+    devs = sample_devices(n, rng)
+    prof = model_profile(cfg)
+    return SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
+                            devs, sfl, prof, seed=0, vectorized=vectorized)
+
+
+def test_vectorized_sim_matches_seed_loop():
+    """The vectorized round engine must reproduce the seed per-client-loop
+    engine: same per-round losses, same eval metrics, same final units."""
+    def policy(s, rng):
+        return np.full(s.n, 8), np.full(s.n, 3)
+
+    res = {}
+    for vec in (True, False):
+        sim = _make_sim(vectorized=vec)
+        res[vec] = (sim.run(policy, rounds=6, eval_every=1), sim)
+
+    r_v, sim_v = res[True]
+    r_l, sim_l = res[False]
+    np.testing.assert_allclose(r_v.train_loss, r_l.train_loss,
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(r_v.test_loss, r_l.test_loss,
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(r_v.test_acc, r_l.test_acc, atol=0.051)
+    # final parameters agree unit-by-unit
+    for u_v, u_l in zip(sim_v.client_units[0], sim_l.client_units[0]):
+        for a, b in zip(jax.tree_util.tree_leaves(u_v),
+                        jax.tree_util.tree_leaves(u_l)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-3, atol=2e-4)
+
+
+def test_vectorized_matches_seed_loop_on_reconfiguration():
+    """A reconfiguration that lowers the cut mid-interval moves
+    still-diverged units to the server side; both engines must apply the
+    same (client-mean) Eq. 4 base and stay equivalent."""
+    def make_policy():
+        calls = [0]
+
+        def policy(s, rng):
+            calls[0] += 1
+            cut = 4 if calls[0] == 1 else 2
+            return np.full(s.n, 8), np.full(s.n, cut)
+
+        return policy
+
+    res = {}
+    for vec in (True, False):
+        sim = _make_sim(vectorized=vec, agg=5)
+        res[vec] = sim.run(make_policy(), rounds=6, eval_every=1,
+                           reconfigure_every=2)
+    np.testing.assert_allclose(res[True].train_loss, res[False].train_loss,
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(res[True].test_loss, res[False].test_loss,
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_stack_unstack_roundtrip():
+    cfg = get_config("vgg9-cifar-small")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    units, _ = SP.to_units(cfg, params)
+    per_client = [jax.tree_util.tree_map(lambda a: a + i, units)
+                  for i in range(3)]
+    stacked = SP.stack_unit_trees(per_client)
+    back = SP.unstack_unit_trees(stacked, 3)
+    for i in range(3):
+        for u_a, u_b in zip(per_client[i], back[i]):
+            for a, b in zip(jax.tree_util.tree_leaves(u_a),
+                            jax.tree_util.tree_leaves(u_b)):
+                assert bool(jnp.array_equal(a, b))
+
+
+def test_aggregate_where_flag():
+    tree = {"w": jnp.asarray([[1.0, 1.0], [3.0, 3.0]])}
+    off = SP.aggregate_where(tree, jnp.asarray(False))
+    on = SP.aggregate_where(tree, jnp.asarray(True))
+    assert bool(jnp.array_equal(off["w"], tree["w"]))
+    assert bool(jnp.array_equal(on["w"],
+                                jnp.asarray([[2.0, 2.0], [2.0, 2.0]])))

@@ -1,7 +1,12 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.config import get_config, SFLConfig, DeviceProfile
 from repro.core.profiles import model_profile
