@@ -13,14 +13,20 @@ import time
 
 import numpy as np
 
-from repro.config import get_config, SFLConfig
-from repro.core.profiles import model_profile
-from repro.core.latency import sample_devices
-from repro.core.bcd import HASFLOptimizer
-from repro.core.sfl import SFLEdgeSimulator
-from repro.core import baselines
-from repro.models import build_model
-from repro.data import (make_cifar_like, partition_iid,
+from repro.utils.cache import enable_compilation_cache
+
+# every figure run compiles the same small executables; cache them on disk
+# so repeated runs skip compilation (REPRO_JAX_CACHE overrides the path)
+enable_compilation_cache()
+
+from repro.config import get_config, SFLConfig  # noqa: E402
+from repro.core.profiles import model_profile  # noqa: E402
+from repro.core.latency import sample_devices  # noqa: E402
+from repro.core.bcd import HASFLOptimizer  # noqa: E402
+from repro.core.sfl import SFLEdgeSimulator  # noqa: E402
+from repro.core import baselines  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.data import (make_cifar_like, partition_iid,  # noqa: E402
                         partition_noniid_shards, ClientSampler)
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
@@ -34,7 +40,12 @@ def full_profile(arch: str = "vgg16-cifar"):
 
 def make_sim(*, n_clients=8, iid=False, agg_interval=15, lr=0.05,
              n_train=1200, n_test=300, seed=0, arch="vgg9-cifar-small",
-             n_classes=10, vectorized=True):
+             n_classes=10, vectorized=True, engine=None):
+    """``engine=None`` auto-picks: the round-scan engine for the default
+    vectorized path (what every paper-figure driver wants — fastest and
+    equivalent), the legacy loop when ``vectorized=False``."""
+    if engine is None:
+        engine = "scan" if vectorized else "legacy"
     cfg = get_config(arch)
     model = build_model(cfg)
     rng = np.random.default_rng(seed)
@@ -49,7 +60,7 @@ def make_sim(*, n_clients=8, iid=False, agg_interval=15, lr=0.05,
     prof = model_profile(cfg)
     devs = sample_devices(n_clients, rng)
     sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
-                           devs, sfl, prof, seed=seed, vectorized=vectorized)
+                           devs, sfl, prof, seed=seed, engine=engine)
     opt = HASFLOptimizer(prof, devs, sfl)
     return sim, opt
 
@@ -87,5 +98,33 @@ def save_csv(path: str, header: list, rows: list) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+
+
+def append_csv(path: str, header: list, rows: list) -> None:
+    """Append rows, starting a fresh file when absent or the schema moved.
+
+    Used by trajectory files (``sim_speed.csv``): every run adds rows so
+    the perf history across PRs stays visible instead of being clobbered.
+    On a schema change the old file is preserved as ``<path>.old`` rather
+    than silently deleted.
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    head = ",".join(header)
+    keep = False
+    if os.path.exists(path):
+        with open(path) as f:
+            keep = f.readline().strip() == head
+        if not keep:
+            bak = path + ".old"
+            k = 1
+            while os.path.exists(bak):
+                bak = f"{path}.old{k}"
+                k += 1
+            os.replace(path, bak)
+    with open(path, "a" if keep else "w") as f:
+        if not keep:
+            f.write(head + "\n")
         for r in rows:
             f.write(",".join(str(x) for x in r) + "\n")

@@ -1,21 +1,27 @@
-"""Micro-benchmark: vectorized vs. seed per-client-loop simulator round.
+"""Micro-benchmark: the three simulator round engines.
 
-The vectorized engine runs each HASFL round as a single jitted step over
-[N, ...]-stacked client units; the seed engine dispatches N separate
-(jitted) grad calls with a blocking loss read each, plus O(N*U) Python
-tree_map update loops per round.  That per-round host overhead is what
-the refactor removes, so the measured gain depends on how much device
-compute amortizes it:
+- ``legacy``: the seed per-client Python loop — N separate jitted grad
+  calls plus O(N*U) Python tree_map update loops per round.
+- ``vectorized``: one jitted step per round over [N, ...]-stacked client
+  units; still pays per-round host work (sampler, np.stack, upload,
+  dispatch).
+- ``scan``: whole segments of rounds as one jitted ``lax.scan`` with
+  donated carry over device-resident data (DESIGN.md §8) — the per-round
+  host work drops to zero inside a segment.
 
-- ``lm-tiny`` (dispatch-bound — the O(N*U) overhead regime): >= 3x.
-- ``lm-small`` (per-client compute starts to dominate): ~1.5-2.5x on
-  CPU, where a vmapped grad over per-client *weights* lowers to batched
-  GEMMs that XLA-CPU executes no faster than the sequential loop.  On
-  accelerators the batched kernels win as well.
+What the measured gain depends on is how much device compute amortizes the
+removed host overhead:
+
+- ``lm-tiny`` (dispatch-bound — the per-round-overhead regime): the scan
+  engine's one-dispatch-per-segment is the dominant win.
+- ``lm-small`` (per-client compute starts to dominate): smaller but real —
+  the scan engine still removes the per-round sampler/stack/upload and the
+  undonated [N, ...] state copy.
 - ``--cnn``: vmapping per-client conv weights lowers to batch-grouped
   convolutions — near-1x on CPU, included for honesty.
 
-    PYTHONPATH=src python benchmarks/sim_speed.py [--clients 16] [--rounds 10]
+    PYTHONPATH=src python benchmarks/sim_speed.py [--clients 16] [--rounds 20]
+    PYTHONPATH=src python benchmarks/sim_speed.py --quick   # CI tier-1 mode
 """
 from __future__ import annotations
 
@@ -27,10 +33,12 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(__file__))
-from common import make_sim, save_csv, OUT_DIR  # noqa: E402
+from common import make_sim, append_csv, OUT_DIR  # noqa: E402
+
+ENGINES = ["legacy", "vectorized", "scan"]
 
 
-def make_lm_sim(*, n_clients: int, vectorized: bool, batch: int = 4,
+def make_lm_sim(*, n_clients: int, engine: str, batch: int = 4,
                 seq: int = 32, n_layers: int = 2, d_model: int = 64,
                 vocab: int = 256):
     from repro.config import get_config, reduced, SFLConfig
@@ -53,66 +61,89 @@ def make_lm_sim(*, n_clients: int, vectorized: bool, batch: int = 4,
     prof = model_profile(get_config("vgg16-cifar"))   # latency model only
     sim = SFLEdgeSimulator(model, sampler,
                            {"tokens": tokens[:64], "labels": labels[:64]},
-                           devs, sfl, prof, seed=0, vectorized=vectorized)
+                           devs, sfl, prof, seed=0, engine=engine)
     return sim, batch
 
 
-def make_lm_tiny(*, n_clients: int, vectorized: bool):
-    return make_lm_sim(n_clients=n_clients, vectorized=vectorized,
+def make_lm_tiny(*, n_clients: int, engine: str):
+    return make_lm_sim(n_clients=n_clients, engine=engine,
                        batch=2, seq=16, n_layers=1, d_model=32, vocab=128)
 
 
 def time_rounds(sim, rounds: int, b: int, cut: int = 2,
-                repeats: int = 3) -> float:
-    """Median wall seconds per round over ``repeats`` timed segments.
+                repeats: int = 5) -> float:
+    """Min wall seconds per round over ``repeats`` timed segments.
 
-    eval_every is set past ``rounds`` so the (engine-independent) eval
-    cost is paid once per segment and amortized over all rounds.
+    Min, not median: shared-tenancy CI boxes show 40%+ swings between
+    identical runs, and the minimum is the standard noise-robust
+    estimator for dispatch-cost microbenchmarks (same rationale as
+    ``timeit``) — applied uniformly to every engine.
+
+    eval_every and reconfigure_every are set past ``rounds`` so the
+    (engine-independent) eval cost is paid once per run and every engine
+    measures pure round throughput; the every-I aggregation stage still
+    runs on its schedule inside each engine.
     """
     def policy(s, rng):
         return np.full(s.n, b), np.full(s.n, cut)
 
-    sim.run(policy, rounds=1, eval_every=10_000)      # warmup / compile
+    kw = dict(eval_every=10_000, reconfigure_every=10_000)
+    sim.run(policy, rounds=rounds, **kw)          # warmup / compile
     per = []
     for _ in range(repeats):
         t0 = time.time()
-        sim.run(policy, rounds=rounds, eval_every=10_000)
+        sim.run(policy, rounds=rounds, **kw)
         per.append((time.time() - t0) / rounds)
-    return float(np.median(per))
+    return float(np.min(per))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, nargs="*", default=[16])
-    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--cnn", action="store_true",
                     help="also run the (CPU-conv-bound) vgg9 configuration")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI tier-1 mode: small clients/rounds, lm-tiny "
+                         "only — tracks the trajectory, proves nothing "
+                         "about absolute speed")
     ap.add_argument("--out", default=os.path.join(OUT_DIR, "sim_speed.csv"))
     args = ap.parse_args()
+    if args.quick:
+        args.clients, args.rounds, args.repeats = [4], 5, 2
 
     rows = []
     for n in args.clients:
-        configs = [("lm-tiny", make_lm_tiny), ("lm-small", make_lm_sim)]
-        if args.cnn:
-            def make_cnn(n_clients, vectorized):
+        configs = [("lm-tiny", make_lm_tiny)]
+        if not args.quick:
+            configs.append(("lm-small", make_lm_sim))
+        if args.cnn and not args.quick:
+            def make_cnn(n_clients, engine):
                 sim, _ = make_sim(n_clients=n_clients, iid=True, seed=0,
-                                  vectorized=vectorized)
+                                  engine=engine)
                 return sim, 8
             configs.append(("cnn", lambda **kw: make_cnn(**kw)))
         for name, factory in configs:
-            sim_v, b = factory(n_clients=n, vectorized=True)
-            t_vec = time_rounds(sim_v, args.rounds, b)
-            sim_l, b = factory(n_clients=n, vectorized=False)
-            t_loop = time_rounds(sim_l, args.rounds, b)
-            speedup = t_loop / t_vec
-            rows.append([name, n, round(t_loop * 1e3, 1),
-                         round(t_vec * 1e3, 1), round(speedup, 2)])
-            print(f"{name:8s} N={n:3d}  loop {t_loop*1e3:8.1f} ms/round  "
-                  f"vectorized {t_vec*1e3:8.1f} ms/round  "
-                  f"speedup {speedup:5.2f}x", flush=True)
-    save_csv(args.out,
-             ["config", "n_clients", "loop_ms", "vectorized_ms", "speedup"],
-             rows)
+            ms = {}
+            for engine in ENGINES:
+                sim, b = factory(n_clients=n, engine=engine)
+                ms[engine] = time_rounds(sim, args.rounds, b,
+                                         repeats=args.repeats) * 1e3
+            vec_speedup = ms["legacy"] / ms["vectorized"]
+            scan_speedup = ms["vectorized"] / ms["scan"]
+            rows.append([name, n, round(ms["legacy"], 1),
+                         round(ms["vectorized"], 1), round(ms["scan"], 1),
+                         round(vec_speedup, 2), round(scan_speedup, 2)])
+            print(f"{name:8s} N={n:3d}  loop {ms['legacy']:8.1f} ms/round  "
+                  f"vectorized {ms['vectorized']:8.1f} ms/round  "
+                  f"scan {ms['scan']:8.1f} ms/round  "
+                  f"vec {vec_speedup:5.2f}x  scan +{scan_speedup:5.2f}x",
+                  flush=True)
+    append_csv(args.out,
+               ["config", "n_clients", "loop_ms", "vectorized_ms",
+                "scan_ms", "vec_speedup", "scan_speedup"],
+               rows)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,10 @@ Two execution paths share the same algorithmic semantics (Algorithm 1):
    sub-model aggregated every round (Eq. 4), client-specific sub-models
    (client-side + server-non-common) aggregated every I rounds (Eq. 7),
    wall-clock advanced by the Eqns (28)-(40) latency model, metrics on a
-   held-out set. Used by all paper-figure benchmarks.
+   held-out set. Used by all paper-figure benchmarks.  Three round
+   engines (``legacy`` / ``vectorized`` / ``scan``) share one update rule
+   (`split.hasfl_round_update`); the scan engine runs whole segments of
+   rounds device-resident (DESIGN.md §8).
 
 2. **make_hasfl_train_step** — the SPMD pod realization: client-stacked
    prefix parameters [N, ...] sharded over the data axis, server suffix
@@ -37,8 +40,21 @@ from repro.config import ModelConfig, SFLConfig, DeviceProfile, CNN
 from repro.core.latency import LatencyModel
 from repro.core.profiles import LayerProfile
 from repro.core import split as SP
+from repro.data.pipeline import DeviceClientStore
 from repro.models.factory import Model
 from repro.training.optim import make_optimizer
+
+
+def pow2_bucket(n: int) -> int:
+    """Round a segment's batch maximum up to the next power of two.
+
+    The scan engine pads gather plans to ``pow2_bucket(b_max)`` columns so
+    a reconfiguration sweep over batch maxima hits a bounded (log-sized)
+    set of executables instead of one compile per distinct b_max; the
+    extra columns carry loss-mask zeros and contribute exactly nothing
+    (DESIGN.md §8).
+    """
+    return 1 << max(0, int(n) - 1).bit_length()
 
 
 # ---------------------------------------------------------------------------
@@ -64,6 +80,13 @@ class SimResult:
         return self.clock[-1] if self.clock else float("inf")
 
 
+def clip_scale_from_norm(norm, clip: float):
+    """min(1, clip/norm) — THE clip rule, shared by every engine so the
+    legacy==vectorized==scan equivalence can't drift at the definition
+    site."""
+    return jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+
+
 def clip_by_global_norm(grads, clip: float):
     """Scale a gradient tree so its global L2 norm is at most ``clip``.
 
@@ -78,28 +101,35 @@ def clip_by_global_norm(grads, clip: float):
     leaves = jax.tree_util.tree_leaves(grads)
     norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
                         for l in leaves))
-    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    scale = clip_scale_from_norm(norm, clip)
     return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype),
                                   grads)
 
 
 class SFLEdgeSimulator:
-    """Paper-faithful edge simulation with two equivalent round engines.
+    """Paper-faithful edge simulation with three equivalent round engines.
 
-    ``vectorized=True`` (default) keeps one [N, ...]-stacked copy of every
+    ``engine="vectorized"`` keeps one [N, ...]-stacked copy of every
     cuttable unit and runs each round as a single jitted step: a vmapped
     per-client grad, the Eq. 4 server-common mean update, the Eq. 5-6
     client-specific updates, and the every-I Eq. 7 aggregation folded in as
     a ``jnp.where`` on a traced flag (the same idiom as the SPMD pod step).
-    ``vectorized=False`` preserves the original per-client Python loop —
-    the reference for the equivalence regression test and the
-    ``benchmarks/sim_speed.py`` comparison.
+    ``engine="scan"`` goes one level further and runs an entire *segment*
+    of rounds — up to the next eval/reconfiguration boundary — as one
+    jitted ``lax.scan`` with donated carry over device-resident data
+    (carry layout, donation, host-RNG index feeding, and b_max bucketing
+    are specified in DESIGN.md §8); ``run()`` then acts as a segment
+    scheduler and fetches per-round losses once per segment.
+    ``engine="legacy"`` preserves the original per-client Python loop —
+    the reference for the equivalence regression tests and the
+    ``benchmarks/sim_speed.py`` comparison.  The legacy ``vectorized``
+    bool maps to ``"vectorized"``/``"legacy"`` when ``engine`` is unset.
     """
 
     def __init__(self, model: Model, sampler, test_batch: dict,
                  devices: Sequence[DeviceProfile], sfl: SFLConfig,
                  profile: LayerProfile, seed: int = 0,
-                 vectorized: bool = True):
+                 vectorized: bool = True, engine: Optional[str] = None):
         self.model = model
         self.cfg = model.cfg
         self.sampler = sampler
@@ -110,7 +140,12 @@ class SFLEdgeSimulator:
         self.lat = LatencyModel(profile, devices, sfl)
         self.n = len(devices)
         self.rng = np.random.default_rng(seed)
-        self.vectorized = bool(vectorized)
+        if engine is None:
+            engine = "vectorized" if vectorized else "legacy"
+        if engine not in ("legacy", "vectorized", "scan"):
+            raise ValueError(f"unknown round engine {engine!r}")
+        self.engine = engine
+        self.vectorized = engine != "legacy"
 
         params = model.init(jax.random.PRNGKey(seed))
         units, self.rebuild = SP.to_units(self.cfg, params)
@@ -132,7 +167,14 @@ class SFLEdgeSimulator:
         # per-client dispatch the vectorized engine doesn't
         self._grad_fn = jax.jit(_clipped_grad)
         self._eval_fn = jax.jit(self._eval)
-        self._round_fn = jax.jit(self._vectorized_round)
+        # the previous stacked state is dead after each round/segment, so
+        # donate it and let XLA update in place instead of copying [N, ...]
+        self._round_fn = jax.jit(self._vectorized_round,
+                                 donate_argnums=(0,))
+        if engine == "scan":
+            self.store = DeviceClientStore.from_sampler(sampler)
+            self._scan_fn = jax.jit(self._scan_segment,
+                                    donate_argnums=(0,))
 
     @property
     def client_units(self):
@@ -182,47 +224,65 @@ class SFLEdgeSimulator:
         return list(range(0, l_c_units + 1))   # embed + first l_c reps
 
     # -- round engines --------------------------------------------------------
-    def _vectorized_round(self, stacked, batch, masks, do_agg):
-        """One HASFL round over [N, ...]-stacked units (jitted).
-
-        Fuses: vmapped per-client grads (with per-client clipping), the
-        Eq. 4 server-common mean update, the Eq. 5-6 client-specific
-        updates, and the Eq. 7 every-I aggregation — unit membership and
-        the aggregation flag are traced, so one executable covers every
-        (cut, round) combination at a given batch shape.
-        """
-        gamma = self.sfl.lr
+    def _client_grads(self, stacked, batch):
+        """Vmapped per-client (loss, raw grad, clip scale) over stacked
+        units.  The clip factor is returned separately (same math as
+        ``clip_by_global_norm``) so the round update can fuse it into its
+        single pass over the gradients instead of materializing a scaled
+        copy of the whole gradient tree."""
         clip = self.sfl.clip_norm
 
         def per_client(units, b):
             (loss, _), g = jax.value_and_grad(
                 self._loss, has_aux=True)(units, b)
-            return loss, clip_by_global_norm(g, clip)
+            return loss, g
 
         losses, grads = jax.vmap(per_client)(stacked, batch)
+        scale = None
+        if clip:
+            norm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(l.astype(jnp.float32)),
+                        axis=tuple(range(1, l.ndim)))
+                for l in jax.tree_util.tree_leaves(grads)))
+            scale = clip_scale_from_norm(norm, clip)
+        return losses, grads, scale
 
-        new_stacked = []
-        for u, (p_u, g_u) in enumerate(zip(stacked, grads)):
-            m = masks[u]
+    def _vectorized_round(self, stacked, batch, masks, do_agg):
+        """One HASFL round over [N, ...]-stacked units (jitted).
 
-            def upd(p, g, m=m):
-                # Eq. 4: server-common — mean grad applied to the common
-                # copy (the client mean; identical to any single copy while
-                # the equal-across-clients invariant holds, and the correct
-                # base when a reconfiguration moves a diverged unit to the
-                # server side).
-                mean_g = g.mean(axis=0)
-                common = p.mean(axis=0) - gamma * mean_g.astype(p.dtype)
-                # Eq. 5-6: client-specific — per-client SGD
-                spec = p - gamma * g.astype(p.dtype)
-                return jnp.where(m > 0, spec,
-                                 jnp.broadcast_to(common[None], p.shape))
-
-            new_u = jax.tree_util.tree_map(upd, p_u, g_u)
-            # Eq. 7: every-I aggregation of client-specific units only
-            new_stacked.append(SP.aggregate_where(
-                new_u, jnp.logical_and(do_agg, m > 0)))
+        Fuses: vmapped per-client grads (with per-client clipping) and the
+        Eq. 4 / 5-6 / 7 update rule (`split.hasfl_round_update`, shared
+        with the scan engine) — unit membership and the aggregation flag
+        are traced, so one executable covers every (cut, round)
+        combination at a given batch shape.
+        """
+        losses, grads, scale = self._client_grads(stacked, batch)
+        new_stacked = SP.hasfl_round_update(stacked, grads, masks, do_agg,
+                                            self.sfl.lr, grad_scale=scale)
         return new_stacked, losses
+
+    def _scan_segment(self, stacked, t0, idx_seg, row_mask, masks, arrays):
+        """Run a whole segment of rounds as one jitted ``lax.scan``.
+
+        Carry: (stacked units, absolute round counter).  Per step: gather
+        the padded per-client batch on device from the segment's
+        pre-drawn ``[R, N, b_pad]`` index plan, run the shared round body,
+        and derive the every-I Eq. 7 flag from the traced counter.  The
+        per-round client losses come back as the scan ``ys`` — one host
+        fetch per segment instead of per round.  (DESIGN.md §8.)
+        """
+        interval = self.sfl.agg_interval
+
+        def step(carry, idx_r):
+            stacked, t = carry
+            t1 = t + 1
+            batch = DeviceClientStore.device_batch(arrays, idx_r, row_mask)
+            new_stacked, losses = self._vectorized_round(
+                stacked, batch, masks, (t1 % interval) == 0)
+            return (new_stacked, t1), losses
+
+        (stacked, _), losses = jax.lax.scan(step, (stacked, t0), idx_seg)
+        return stacked, losses
 
     def _legacy_round(self, b, cuts, client_idx, do_agg):
         """The original per-client Python loop (seed implementation) —
@@ -236,7 +296,10 @@ class SFLEdgeSimulator:
             batch = self.sampler.sample(i, int(b[i]), pad_to=b_max)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             (loss, _), g = self._grad_fn(self._client_units[i], batch)
-            losses.append(float(loss))
+            # keep the loss on device — a float() here would block the
+            # dispatch queue once per client per round; run() fetches the
+            # stacked losses only at eval boundaries
+            losses.append(loss)
             grads_all.append(g)
 
         # server-common units (> L_c): averaged update, every round (Eq.4).
@@ -273,19 +336,21 @@ class SFLEdgeSimulator:
                     *[self._client_units[i][u] for i in range(self.n)])
                 for i in range(self.n):
                     self._client_units[i][u] = mean_u
-        return losses
+        return jnp.stack(losses)
 
     # -- main loop ------------------------------------------------------------
     def run(self, policy_fn: Callable, rounds: int, eval_every: int = 10,
             reconfigure_every: Optional[int] = None,
             verbose: bool = False) -> SimResult:
         """policy_fn(sim, rng) -> (b [N], cuts_layers [N])."""
+        reconf = reconfigure_every or self.sfl.agg_interval
+        if self.engine == "scan":
+            return self._run_scan(policy_fn, rounds, eval_every, reconf,
+                                  verbose)
         res = SimResult()
         clock = 0.0
-        reconf = reconfigure_every or self.sfl.agg_interval
         b, cuts = policy_fn(self, self.rng)
-        res.b_history.append(np.asarray(b).copy())
-        res.cut_history.append(np.asarray(cuts).copy())
+        self._record_policy(res, b, cuts)
         n_units_total = len(self.units)
 
         for t in range(1, rounds + 1):
@@ -312,25 +377,92 @@ class SFLEdgeSimulator:
             if do_agg:
                 clock += self.lat.t_agg(b, cuts)
 
-            # --- reconfiguration (Algorithm 1 line 23) --------------------
-            if t % reconf == 0 and t < rounds:
-                b, cuts = policy_fn(self, self.rng)
-                res.b_history.append(np.asarray(b).copy())
-                res.cut_history.append(np.asarray(cuts).copy())
-
-            # --- metrics ---------------------------------------------------
+            b, cuts = self._maybe_reconfigure(res, policy_fn, t, reconf,
+                                              rounds, b, cuts)
             if t % eval_every == 0 or t == rounds:
-                agg = self._aggregate_model()
-                tl, ta = self._eval_fn(agg, self.test_batch)
-                res.rounds.append(t)
-                res.clock.append(clock)
-                res.train_loss.append(float(np.mean(np.asarray(losses))))
-                res.test_loss.append(float(tl))
-                res.test_acc.append(float(ta))
-                if verbose:
-                    print(f"round {t:5d} clock {clock:9.1f}s "
-                          f"loss {np.mean(np.asarray(losses)):.4f} "
-                          f"acc {float(ta):.4f}", flush=True)
+                self._record_metrics(res, t, clock, losses, verbose)
+        return res
+
+    # -- run() scaffolding shared by the per-round loop and the segment
+    # scheduler: any change here changes both paths, keeping the
+    # scan==vectorized equivalence contract in one place --------------------
+    def _record_policy(self, res: SimResult, b, cuts) -> None:
+        res.b_history.append(np.asarray(b).copy())
+        res.cut_history.append(np.asarray(cuts).copy())
+
+    def _maybe_reconfigure(self, res: SimResult, policy_fn: Callable,
+                           t: int, reconf: int, rounds: int, b, cuts):
+        """Reconfiguration (Algorithm 1 line 23)."""
+        if t % reconf == 0 and t < rounds:
+            b, cuts = policy_fn(self, self.rng)
+            self._record_policy(res, b, cuts)
+        return b, cuts
+
+    def _record_metrics(self, res: SimResult, t: int, clock: float,
+                        losses, verbose: bool) -> None:
+        """Eval + metric append; the only host fetch of ``losses``."""
+        agg = self._aggregate_model()
+        tl, ta = self._eval_fn(agg, self.test_batch)
+        mean_loss = float(np.mean(np.asarray(losses)))
+        res.rounds.append(t)
+        res.clock.append(clock)
+        res.train_loss.append(mean_loss)
+        res.test_loss.append(float(tl))
+        res.test_acc.append(float(ta))
+        if verbose:
+            print(f"round {t:5d} clock {clock:9.1f}s "
+                  f"loss {mean_loss:.4f} "
+                  f"acc {float(ta):.4f}", flush=True)
+
+    def _run_scan(self, policy_fn: Callable, rounds: int, eval_every: int,
+                  reconf: int, verbose: bool) -> SimResult:
+        """Segment scheduler for the scan engine.
+
+        Chops the round range at eval / reconfiguration boundaries (the
+        every-I stage needs no boundary — it runs inside the scan on the
+        traced counter), pre-draws each segment's gather plan from the
+        authoritative host RNG, and dispatches one donated scan per
+        segment.  Metrics, clock accounting, and policy calls replicate
+        the per-round engines exactly.
+        """
+        res = SimResult()
+        clock = 0.0
+        b, cuts = policy_fn(self, self.rng)
+        self._record_policy(res, b, cuts)
+        n_units_total = len(self.units)
+
+        t = 0
+        while t < rounds:
+            nxt = min((t // eval_every + 1) * eval_every,
+                      (t // reconf + 1) * reconf, rounds)
+            ucuts = self._unit_cuts(np.asarray(cuts))
+            l_c_units = int(np.max(ucuts))
+            masks = jnp.asarray(SP.client_unit_mask(
+                self.cfg, n_units_total, l_c_units))
+            b_pad = pow2_bucket(int(np.max(b)))
+            idx = self.store.segment_indices(nxt - t, b, b_pad)
+            row_mask = self.store.row_mask(b, b_pad)
+            self._stacked, seg_losses = self._scan_fn(
+                self._stacked, jnp.asarray(t, jnp.int32), idx, row_mask,
+                masks, self.store.arrays)
+
+            # clock: accumulate round-by-round on host (bitwise-identical
+            # float summation to the per-round engines)
+            t_split = self.lat.t_split(b, cuts)
+            t_agg = self.lat.t_agg(b, cuts)
+            for r in range(t + 1, nxt + 1):
+                clock += t_split
+                if r % self.sfl.agg_interval == 0:
+                    clock += t_agg
+            t = nxt
+
+            b, cuts = self._maybe_reconfigure(res, policy_fn, t, reconf,
+                                              rounds, b, cuts)
+            if t % eval_every == 0 or t == rounds:
+                # one [R, N] loss fetch per segment; the eval round is the
+                # segment's last, so its losses are the final ys row
+                self._record_metrics(res, t, clock,
+                                     np.asarray(seg_losses)[-1], verbose)
         return res
 
     def _aggregate_model(self):

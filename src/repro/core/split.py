@@ -138,6 +138,51 @@ def client_unit_mask(cfg: ModelConfig, n_units: int, l_c_units: int):
     return mask
 
 
+def hasfl_round_update(stacked: list, grads: list, masks, do_agg,
+                       gamma: float, grad_scale=None) -> list:
+    """One HASFL parameter update over [N, ...]-stacked units (traceable).
+
+    The single round body shared by the per-round vectorized engine and
+    the round-scan engine (``sfl.SFLEdgeSimulator``): given per-client
+    gradients it applies the Eq. 4 server-common mean update, the Eq. 5-6
+    client-specific updates, and the Eq. 7 every-I aggregation — unit
+    membership (``masks``, [U] float) and the aggregation flag are traced,
+    so one executable covers every (cut, round) combination at a given
+    batch shape.
+
+    The Eq. 4 and Eq. 7 means are folded into one pass algebraically: the
+    client mean of the per-client SGD results (Eq. 7's aggregate) equals
+    SGD from the client mean with the mean gradient (Eq. 4's common
+    update) — exact by linearity — so every unit computes ``spec`` once,
+    one ``mean`` of it, and one select; the old separate mean-of-params /
+    mean-of-grads / second aggregation pass per unit disappears.  The
+    per-client clip factor (``grad_scale``, [N]) is applied inside the
+    same pass instead of materializing a scaled gradient tree.
+    """
+    new_stacked = []
+    for u, (p_u, g_u) in enumerate(zip(stacked, grads)):
+        m = masks[u]
+
+        def upd(p, g, m=m):
+            if grad_scale is not None:
+                g = g * grad_scale.reshape((-1,) + (1,) * (g.ndim - 1))
+            # Eq. 5-6: client-specific — per-client SGD
+            spec = p - gamma * g.astype(p.dtype)
+            # Eq. 4 == Eq. 7 aggregate: server-common units take the mean
+            # update every round (the client mean is identical to any
+            # single copy while the equal-across-clients invariant holds,
+            # and the correct base when a reconfiguration moves a
+            # diverged unit to the server side); client-specific units
+            # take it exactly on aggregation rounds.
+            common = spec.mean(axis=0)
+            keep_spec = jnp.logical_and(m > 0, jnp.logical_not(do_agg))
+            return jnp.where(keep_spec, spec,
+                             jnp.broadcast_to(common[None], p.shape))
+
+        new_stacked.append(jax.tree_util.tree_map(upd, p_u, g_u))
+    return new_stacked
+
+
 def aggregate_where(tree, do_agg):
     """Every-I aggregation (Eq. 7) as a traced select: when ``do_agg``,
     replace each [N, ...] leaf with its client mean broadcast back over N.

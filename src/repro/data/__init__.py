@@ -1,3 +1,4 @@
 from repro.data.synthetic import make_cifar_like, make_lm_data  # noqa: F401
 from repro.data.partition import partition_iid, partition_noniid_shards  # noqa: F401
-from repro.data.pipeline import ClientSampler  # noqa: F401
+from repro.data.pipeline import (ClientSampler, DeviceClientStore,  # noqa: F401
+                                 draw_indices)

@@ -4,12 +4,36 @@ HASFL assigns a different b_i to every client each round.  jit'd steps need
 static shapes, so batches are padded to ``b_max`` with a ``loss_mask``
 (the padded-sample gradient contribution is exactly zero; the mean is taken
 over real samples only — per-client SGD semantics preserved).
+
+Two feeding paths share one host RNG routine (``draw_indices``):
+
+- **ClientSampler** — per-round host batches (legacy + per-round
+  vectorized engines): draw indices, gather on host, zero-pad, upload.
+- **DeviceClientStore** — the round-scan engine's path: the dataset is
+  uploaded once at construction and stays device-resident; the host RNG
+  stream remains authoritative by pre-generating the tiny ``[R, N, b_pad]``
+  int32 index tensor per segment (same draws, same order, bitwise-identical
+  sampling), and per-round batches are gathered *on device* inside the
+  scan (DESIGN.md §8).
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import numpy as np
+
+
+def draw_indices(rng: np.random.Generator, pool: np.ndarray,
+                 batch: int) -> np.ndarray:
+    """Draw one client's round indices from its shard pool.
+
+    The single authoritative sampling routine: ``ClientSampler.sample``
+    and ``DeviceClientStore.segment_indices`` both consume the host RNG
+    through this function, so the two feeding paths see bitwise-identical
+    index streams when called in the same (round, client) order.
+    """
+    return rng.choice(pool, size=min(batch, len(pool)),
+                      replace=len(pool) < batch)
 
 
 class ClientSampler:
@@ -25,13 +49,10 @@ class ClientSampler:
         return len(self.client_indices)
 
     def sample(self, client: int, batch: int, pad_to: Optional[int] = None):
-        pool = self.client_indices[client]
-        take = self.rng.choice(pool, size=min(batch, len(pool)),
-                               replace=len(pool) < batch)
+        take = draw_indices(self.rng, self.client_indices[client], batch)
         out = {k: v[take] for k, v in self.arrays.items()}
         n = len(take)
         pad_to = pad_to or n
-        mask_shape_src = next(iter(out.values()))
         if pad_to > n:
             pad = pad_to - n
             out = {k: np.concatenate(
@@ -45,3 +66,88 @@ class ClientSampler:
             mask[:n] = 1.0
         out["loss_mask"] = mask
         return out
+
+
+class DeviceClientStore:
+    """Device-resident dataset feeding the round-scan engine.
+
+    Uploads every data array once (the leading axis indexes samples
+    globally, exactly as ``ClientSampler.arrays``), then serves whole
+    training segments as index tensors: ``segment_indices`` pre-draws the
+    ``[R, N, b_pad]`` int32 round/client/sample gather plan on the host —
+    consuming the *same* RNG stream as ``ClientSampler`` in the same
+    (round, client) order — and ``device_batch`` turns one ``[N, b_pad]``
+    slice of it into the padded per-client batch on device, inside the
+    jitted scan.  Padded rows are zeroed (not just masked) so the scan
+    engine's batches are bitwise-identical to the host zero-padding path.
+    """
+
+    def __init__(self, arrays: dict, client_indices: list,
+                 rng: np.random.Generator):
+        import jax.numpy as jnp
+        self.arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
+        self.client_indices = [np.asarray(p) for p in client_indices]
+        self.rng = rng
+
+    @classmethod
+    def from_sampler(cls, sampler: ClientSampler) -> "DeviceClientStore":
+        """Share the sampler's arrays *and its RNG object*, so a simulator
+        switching to the scan engine keeps the host stream authoritative."""
+        return cls(sampler.arrays, sampler.client_indices, sampler.rng)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.client_indices)
+
+    def real_counts(self, b) -> np.ndarray:
+        """Per-client real (unpadded) sample count: min(b_i, |pool_i|)."""
+        pools = np.asarray([len(p) for p in self.client_indices])
+        return np.minimum(np.asarray(b, int), pools)
+
+    def segment_indices(self, rounds: int, b, pad_to: int) -> np.ndarray:
+        """Pre-draw the [rounds, N, pad_to] int32 gather plan for a segment.
+
+        Row (r, i) holds client i's round-r sample indices in columns
+        [0, n_i); padding columns gather sample 0 and are zeroed again by
+        the row mask inside ``device_batch``.
+        """
+        n = self.n_clients
+        b_arr = np.asarray(b, int)
+        idx = np.zeros((rounds, n, pad_to), np.int32)
+        for r in range(rounds):
+            for i, pool in enumerate(self.client_indices):
+                take = draw_indices(self.rng, pool, int(b_arr[i]))
+                idx[r, i, :len(take)] = take
+        return idx
+
+    def row_mask(self, b, pad_to: int) -> np.ndarray:
+        """[N, pad_to] 1.0/0.0 real-sample mask for a segment's batches."""
+        counts = self.real_counts(b)
+        return (np.arange(pad_to)[None, :] < counts[:, None]).astype(
+            np.float32)
+
+    @staticmethod
+    def device_batch(arrays: dict, idx, row_mask) -> dict:
+        """Gather one round's padded per-client batch on device (traceable).
+
+        ``idx``: [N, b_pad] int32, ``row_mask``: [N, b_pad].  Padded rows
+        are forced to exact zeros so the result matches the host
+        ``ClientSampler`` zero-padding bit-for-bit, and the loss mask is
+        rebuilt in the sampler's shape convention ([N, b, S] for token
+        data, [N, b] otherwise).
+        """
+        import jax.numpy as jnp
+        batch = {}
+        for k, v in arrays.items():
+            g = jnp.take(v, idx, axis=0)                       # [N, b, ...]
+            m = row_mask.reshape(row_mask.shape + (1,) * (g.ndim - 2))
+            # select, not multiply: a non-finite value in the gathered
+            # index-0 sample must not poison padded rows (0 * inf = nan)
+            batch[k] = jnp.where(m.astype(bool), g, jnp.zeros((), g.dtype))
+        if "tokens" in batch:
+            mask = jnp.broadcast_to(row_mask[:, :, None].astype(jnp.float32),
+                                    batch["tokens"].shape)
+        else:
+            mask = row_mask.astype(jnp.float32)
+        batch["loss_mask"] = mask
+        return batch

@@ -295,6 +295,8 @@ def main():
                     help="skip the unrolled cost variant (multi-pod pass "
                          "only needs the compile/memory proof)")
     args = ap.parse_args()
+    from repro.utils.cache import enable_compilation_cache
+    enable_compilation_cache()
 
     archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
     shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \

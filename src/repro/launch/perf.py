@@ -164,6 +164,8 @@ def main():
     ap.add_argument("--with-cost", action="store_true", default=True)
     ap.add_argument("--out", default="experiments/perf")
     args = ap.parse_args()
+    from repro.utils.cache import enable_compilation_cache
+    enable_compilation_cache()
 
     EXPERIMENTS[args.experiment]()
     rec = DR.run_combo(args.arch, args.shape, args.mesh == "multi",

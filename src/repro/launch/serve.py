@@ -20,6 +20,8 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    from repro.utils.cache import enable_compilation_cache
+    enable_compilation_cache()
 
     import jax
     import jax.numpy as jnp

@@ -52,7 +52,8 @@ def run_edge(args) -> None:
         return baselines.policy(args.policy, opt, prng)
 
     sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
-                           devices, sfl, profile, seed=args.seed)
+                           devices, sfl, profile, seed=args.seed,
+                           engine=args.engine)
     res = sim.run(policy, rounds=args.rounds, eval_every=args.eval_every,
                   verbose=True)
     print(f"final acc={res.test_acc[-1]:.4f} "
@@ -118,6 +119,9 @@ def main():
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=10, dest="eval_every")
+    ap.add_argument("--engine", default="scan",
+                    choices=["legacy", "vectorized", "scan"],
+                    help="edge-simulator round engine (DESIGN.md §8)")
     ap.add_argument("--n-train", type=int, default=2000, dest="n_train")
     ap.add_argument("--n-test", type=int, default=400, dest="n_test")
     ap.add_argument("--csv", default=None)
@@ -130,6 +134,8 @@ def main():
     ap.add_argument("--grad-accum", type=int, default=1, dest="grad_accum")
     ap.add_argument("--reduce", action="store_true", default=True)
     args = ap.parse_args()
+    from repro.utils.cache import enable_compilation_cache
+    enable_compilation_cache()
     if args.mode == "edge":
         run_edge(args)
     else:

@@ -153,8 +153,13 @@ def _build_transformer(cfg: ModelConfig) -> Model:
             return carry + nll.sum(), None
 
         xs = (xc, lc) if mc is None else (xc, lc, mc)
-        nll_sum, _ = jax.lax.scan(chunk, 0.0, xs,
-                                  unroll=n_chunks if unroll else 1)
+        if n_chunks == 1:
+            # short sequences: skip the while-loop — same fold, one call
+            nll_sum, _ = chunk(0.0, jax.tree_util.tree_map(
+                lambda a: a[0], xs))
+        else:
+            nll_sum, _ = jax.lax.scan(chunk, 0.0, xs,
+                                      unroll=n_chunks if unroll else 1)
         total = float(b * s) if mask is None else jnp.maximum(mask.sum(), 1.0)
         return nll_sum / total
 

@@ -1,1 +1,2 @@
 from repro.utils.tree import param_count, tree_bytes, map_leaves  # noqa: F401
+from repro.utils.cache import enable_compilation_cache  # noqa: F401

@@ -1,0 +1,38 @@
+"""Persistent XLA compilation cache.
+
+Repeated figure runs recompile the same executables from scratch on every
+process start; pointing jax at an on-disk cache makes the second and later
+runs skip compilation entirely.  Enabled from ``benchmarks/common.py`` and
+every ``repro.launch`` entry point; the scan engine's bucketing policy
+(DESIGN.md §8) keeps the cached executable set small.
+"""
+from __future__ import annotations
+
+import os
+
+DEFAULT_CACHE_DIR = os.path.join("experiments", ".jax_cache")
+
+
+def enable_compilation_cache(path: str | None = None) -> str:
+    """Point jax at a persistent compilation cache directory.
+
+    Resolution order: explicit ``path`` > ``REPRO_JAX_CACHE`` env var >
+    ``experiments/.jax_cache``.  The thresholds are dropped to zero so
+    even the small CPU-scale executables are cached.  Unknown config
+    flags (older jax) are skipped silently — enabling the cache is an
+    optimization, never a requirement.
+    """
+    path = path or os.environ.get("REPRO_JAX_CACHE", DEFAULT_CACHE_DIR)
+    import jax
+    try:
+        os.makedirs(path, exist_ok=True)
+    except OSError:
+        return path
+    for flag, val in (("jax_compilation_cache_dir", path),
+                      ("jax_persistent_cache_min_entry_size_bytes", -1),
+                      ("jax_persistent_cache_min_compile_time_secs", 0.0)):
+        try:
+            jax.config.update(flag, val)
+        except Exception:
+            pass
+    return path
