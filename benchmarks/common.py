@@ -8,7 +8,9 @@ models on the synthetic CIFAR-like data.
 """
 from __future__ import annotations
 
+import datetime
 import os
+import subprocess
 import time
 
 import numpy as np
@@ -102,21 +104,53 @@ def save_csv(path: str, header: list, rows: list) -> None:
             f.write(",".join(str(x) for x in r) + "\n")
 
 
+def git_sha() -> str:
+    """Short git SHA of the working tree (trajectory-row provenance);
+    empty string outside a repo so benchmarks still run from tarballs."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except (OSError, subprocess.SubprocessError):
+        return ""
+
+
+def now_iso() -> str:
+    return datetime.datetime.now(datetime.timezone.utc) \
+        .strftime("%Y-%m-%dT%H:%M:%SZ")
+
+
 def append_csv(path: str, header: list, rows: list) -> None:
-    """Append rows, starting a fresh file when absent or the schema moved.
+    """Append rows, migrating or rotating the file when the schema moved.
 
     Used by trajectory files (``sim_speed.csv``): every run adds rows so
     the perf history across PRs stays visible instead of being clobbered.
-    On a schema change the old file is preserved as ``<path>.old`` rather
-    than silently deleted.
+    When the on-disk header is a *prefix* of the new one (columns were
+    appended — e.g. the git_sha/timestamp provenance columns), old rows
+    are kept and padded with empty fields, so the whole trajectory stays
+    parseable under the new schema.  On an incompatible change the old
+    file is preserved as ``<path>.old`` rather than silently deleted.
     """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     head = ",".join(header)
     keep = False
     if os.path.exists(path):
         with open(path) as f:
-            keep = f.readline().strip() == head
-        if not keep:
+            old_lines = f.read().splitlines()
+        old_head = old_lines[0].strip() if old_lines else ""
+        keep = old_head == head
+        old_fields = old_head.split(",")
+        if not keep and old_fields == header[:len(old_fields)]:
+            # schema extension: pad historical rows to the new width
+            pad = "," * (len(header) - len(old_fields))
+            with open(path, "w") as f:
+                f.write(head + "\n")
+                for line in old_lines[1:]:
+                    if line.strip():
+                        f.write(line + pad + "\n")
+            keep = True
+        elif not keep:
             bak = path + ".old"
             k = 1
             while os.path.exists(bak):

@@ -2,9 +2,7 @@
 accuracy and converged (simulated) time, IID + non-IID."""
 from __future__ import annotations
 
-import time
 
-import numpy as np
 
 from benchmarks.common import (make_sim, run_policy, emit, save_csv,
                                POLICIES, OUT_DIR)

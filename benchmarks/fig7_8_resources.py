@@ -10,7 +10,7 @@ import numpy as np
 
 from benchmarks.common import (full_profile, emit, save_csv, POLICIES,
                                OUT_DIR, robust_theta)
-from repro.config import SFLConfig, DeviceProfile
+from repro.config import SFLConfig
 from repro.core.bcd import HASFLOptimizer
 from repro.core import baselines
 from repro.core.latency import sample_devices

@@ -1,0 +1,136 @@
+"""Scenario sweep: the closed HASFL control loop vs. fixed baselines
+over time-varying edge scenarios.
+
+For every (preset, policy) cell the simulator runs the *same* data
+stream and the same trace stream (scenarios are re-seeded identically),
+so differences are pure policy effects.  Policies re-decide (b, cuts) at
+every reconfiguration boundary against the scenario's current state
+("hasfl" also re-estimates G²/σ² online); the wall clock charges every
+round the Eq. 28-40 latency of that round's trace state.
+
+Outputs:
+- ``experiments/bench/scenario_sweep.csv`` — full eval trajectories
+  (preset, policy, round, clock, losses, acc), appended per run with git
+  provenance.
+- a printed time-to-target-loss summary per preset: target = the worst
+  best-loss across policies (everyone provably reaches it), time = the
+  simulated clock at the first eval at or under the target.
+
+CI runs ``--smoke`` (2 presets x {hasfl, fixed, fixed-ms}, N=8): it
+asserts HASFL reaches the target strictly faster than both baselines on
+``flaky-uplink`` and exits nonzero otherwise — the headline adaptivity
+claim, gated.
+
+    PYTHONPATH=src python benchmarks/scenario_sweep.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+from common import make_sim, append_csv, git_sha, now_iso, OUT_DIR  # noqa: E402
+
+
+def time_to_target(res, target: float) -> float:
+    """Clock at the first eval whose test loss is <= target (inf if never)."""
+    for k, loss in enumerate(res.test_loss):
+        if loss <= target:
+            return res.clock[k]
+    return float("inf")
+
+
+def run_cell(preset: str, policy: str, args):
+    from repro.scenarios import make_scenario, make_controller
+
+    sim, _ = make_sim(n_clients=args.clients, iid=args.iid, seed=args.seed,
+                      agg_interval=args.agg_interval, engine=args.engine)
+    scenario = make_scenario(preset, sim.devices, seed=args.scenario_seed)
+    ctrl = make_controller(policy, sim.profile, sim.sfl,
+                           estimate=not args.no_estimate, seed=args.seed)
+    t0 = time.time()
+    res = sim.run(ctrl, rounds=args.rounds, eval_every=args.eval_every,
+                  reconfigure_every=args.reconf_every, scenario=scenario)
+    wall = time.time() - t0
+    print(f"{preset:18s} {policy:10s} clock={res.clock[-1]:10.1f}s "
+          f"best_loss={min(res.test_loss):.4f} "
+          f"acc={res.test_acc[-1]:.4f} wall={wall:.0f}s", flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--presets", nargs="*",
+                    default=["stable", "flaky-uplink", "straggler-bursts"])
+    ap.add_argument("--policies", nargs="*",
+                    default=["hasfl", "fixed", "fixed-bs", "fixed-ms"])
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--eval-every", type=int, default=5, dest="eval_every")
+    ap.add_argument("--reconf-every", type=int, default=5, dest="reconf_every")
+    ap.add_argument("--agg-interval", type=int, default=5, dest="agg_interval")
+    ap.add_argument("--engine", default="scan",
+                    choices=["legacy", "vectorized", "scan"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario-seed", type=int, default=7,
+                    dest="scenario_seed")
+    ap.add_argument("--non-iid", dest="iid", action="store_false",
+                    help="shard-based non-IID partitioning (default: IID)")
+    ap.add_argument("--no-estimate", action="store_true", dest="no_estimate",
+                    help="skip online G²/σ² estimation (priors only)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: 2 presets x 3 policies, asserts the "
+                         "flaky-uplink adaptivity win")
+    ap.add_argument("--out",
+                    default=os.path.join(OUT_DIR, "scenario_sweep.csv"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.presets = ["stable", "flaky-uplink"]
+        args.policies = ["hasfl", "fixed", "fixed-ms"]
+        args.clients, args.rounds = max(args.clients, 8), 24
+        args.eval_every = args.reconf_every = args.agg_interval = 4
+
+    sha, ts = git_sha(), now_iso()
+    rows, summary = [], {}
+    for preset in args.presets:
+        results = {}
+        for policy in args.policies:
+            res = run_cell(preset, policy, args)
+            results[policy] = res
+            for k, r in enumerate(res.rounds):
+                rows.append([preset, policy, args.clients, r,
+                             round(res.clock[k], 3),
+                             round(res.train_loss[k], 5),
+                             round(res.test_loss[k], 5),
+                             round(res.test_acc[k], 5), sha, ts])
+        target = max(min(r.test_loss) for r in results.values())
+        summary[preset] = {p: time_to_target(r, target)
+                           for p, r in results.items()}
+        print(f"--- {preset}: target test_loss {target:.4f}; "
+              "time-to-target "
+              + "  ".join(f"{p}={summary[preset][p]:.1f}s"
+                          for p in args.policies), flush=True)
+
+    append_csv(args.out,
+               ["preset", "policy", "n_clients", "round", "clock",
+                "train_loss", "test_loss", "test_acc", "git_sha",
+                "timestamp"],
+               rows)
+
+    if args.smoke:
+        tt = summary["flaky-uplink"]
+        losers = [p for p in args.policies
+                  if p != "hasfl" and tt["hasfl"] >= tt[p]]
+        if losers:
+            print(f"SMOKE FAIL: hasfl time-to-target {tt['hasfl']:.1f}s not "
+                  f"better than {losers} ({tt})", file=sys.stderr)
+            sys.exit(1)
+        print(f"SMOKE OK: hasfl {tt['hasfl']:.1f}s beats "
+              + ", ".join(f"{p} {tt[p]:.1f}s"
+                          for p in args.policies if p != "hasfl"))
+
+
+if __name__ == "__main__":
+    main()

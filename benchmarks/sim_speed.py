@@ -33,9 +33,84 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(__file__))
-from common import make_sim, append_csv, OUT_DIR  # noqa: E402
+from common import (make_sim, append_csv, git_sha, now_iso,  # noqa: E402
+                    OUT_DIR)
 
 ENGINES = ["legacy", "vectorized", "scan"]
+HEADER = ["config", "n_clients", "loop_ms", "vectorized_ms", "scan_ms",
+          "vec_speedup", "scan_speedup", "git_sha", "timestamp"]
+# The CI gate *fails* on the speedup-ratio columns: new_ratio vs the
+# committed ratio is algebraically the absolute engine slowdown
+# normalized by the legacy engine's slowdown in the same run, so a
+# slower/faster CI box (which moves every engine together) cancels out
+# while a real de-optimization of the vectorized/scan path does not.
+# Absolute per-engine slowdowns are still *reported* (warnings) so a
+# uniform regression of shared code stays visible in the CI log.
+GATE_RATIO_COLS = ("vec_speedup", "scan_speedup")
+WARN_COLS = ("loop_ms", "vectorized_ms", "scan_ms")
+GATE_FACTOR = 1.5
+
+
+def last_committed_rows(path: str) -> dict:
+    """Last row per (config, n_clients) already in the trajectory CSV.
+
+    Rows are keyed positionally against HEADER's leading columns, so
+    pre-provenance rows (no git_sha/timestamp) parse fine.
+    """
+    out = {}
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines or lines[0].split(",")[:2] != HEADER[:2]:
+        return out
+    cols = lines[0].split(",")
+    for line in lines[1:]:
+        parts = line.split(",")
+        if len(parts) < 2 or not line.strip():
+            continue
+        row = dict(zip(cols, parts))
+        out[(row["config"], row["n_clients"])] = row
+    return out
+
+
+def check_regression(prev: dict, rows: list) -> tuple:
+    """Compare fresh rows against the last committed ones.
+
+    Returns ``(failures, warnings)``: a drop of any speedup-ratio column
+    below committed/GATE_FACTOR fails (box-invariant — see
+    GATE_RATIO_COLS); absolute per-engine slowdowns >GATE_FACTOR warn.
+    Both sides are min-of-repeats measurements (the noisy-box
+    convention), so comparisons are between floors, not means.
+    """
+    failures, warnings = [], []
+    for r in rows:
+        row = dict(zip(HEADER, [str(x) for x in r]))
+        old = prev.get((row["config"], row["n_clients"]))
+        if old is None:
+            continue
+        for col in GATE_RATIO_COLS:
+            try:
+                before, after = float(old.get(col, "")), float(row[col])
+            except ValueError:
+                continue           # empty/missing historical cell
+            if before > 0 and after < before / GATE_FACTOR:
+                failures.append(
+                    f"{row['config']} N={row['n_clients']} {col}: "
+                    f"{after:.2f}x vs committed {before:.2f}x "
+                    f"(>{GATE_FACTOR}x box-normalized slowdown)")
+        for col in WARN_COLS:
+            try:
+                before, after = float(old.get(col, "")), float(row[col])
+            except ValueError:
+                continue
+            if before > 0 and after > GATE_FACTOR * before:
+                warnings.append(
+                    f"{row['config']} N={row['n_clients']} {col}: "
+                    f"{after:.1f} ms vs committed {before:.1f} ms "
+                    f"({after / before:.2f}x absolute — box change or "
+                    f"uniform regression; not gated)")
+    return failures, warnings
 
 
 def make_lm_sim(*, n_clients: int, engine: str, batch: int = 4,
@@ -70,14 +145,8 @@ def make_lm_tiny(*, n_clients: int, engine: str):
                        batch=2, seq=16, n_layers=1, d_model=32, vocab=128)
 
 
-def time_rounds(sim, rounds: int, b: int, cut: int = 2,
-                repeats: int = 5) -> float:
-    """Min wall seconds per round over ``repeats`` timed segments.
-
-    Min, not median: shared-tenancy CI boxes show 40%+ swings between
-    identical runs, and the minimum is the standard noise-robust
-    estimator for dispatch-cost microbenchmarks (same rationale as
-    ``timeit``) — applied uniformly to every engine.
+def _timed_run(sim, rounds: int, b: int, cut: int = 2) -> float:
+    """One timed segment; returns wall seconds per round.
 
     eval_every and reconfigure_every are set past ``rounds`` so the
     (engine-independent) eval cost is paid once per run and every engine
@@ -87,14 +156,34 @@ def time_rounds(sim, rounds: int, b: int, cut: int = 2,
     def policy(s, rng):
         return np.full(s.n, b), np.full(s.n, cut)
 
-    kw = dict(eval_every=10_000, reconfigure_every=10_000)
-    sim.run(policy, rounds=rounds, **kw)          # warmup / compile
-    per = []
+    t0 = time.time()
+    sim.run(policy, rounds=rounds, eval_every=10_000,
+            reconfigure_every=10_000)
+    return (time.time() - t0) / rounds
+
+
+def time_engines(factory, n: int, rounds: int, repeats: int) -> dict:
+    """Min ms/round per engine, engines *interleaved* across repeats.
+
+    Min, not median: shared-tenancy CI boxes show 40%+ swings between
+    identical runs, and the minimum is the standard noise-robust
+    estimator for dispatch-cost microbenchmarks (same rationale as
+    ``timeit``).  Interleaved, not sequential: the speedup-ratio columns
+    gate CI, and a seconds-scale interference burst that lands entirely
+    inside one engine's measurement window would skew a ratio by the
+    full burst; cycling engine-by-engine within each repeat makes box
+    drift hit every engine alike, so the ratios compare like with like.
+    """
+    sims = {}
+    for engine in ENGINES:
+        sim, b = factory(n_clients=n, engine=engine)
+        sims[engine] = (sim, b)
+        _timed_run(sim, rounds, b)                 # warmup / compile
+    per = {engine: [] for engine in ENGINES}
     for _ in range(repeats):
-        t0 = time.time()
-        sim.run(policy, rounds=rounds, **kw)
-        per.append((time.time() - t0) / rounds)
-    return float(np.min(per))
+        for engine, (sim, b) in sims.items():
+            per[engine].append(_timed_run(sim, rounds, b))
+    return {engine: float(np.min(per[engine])) * 1e3 for engine in ENGINES}
 
 
 def main():
@@ -108,11 +197,20 @@ def main():
                     help="CI tier-1 mode: small clients/rounds, lm-tiny "
                          "only — tracks the trajectory, proves nothing "
                          "about absolute speed")
+    ap.add_argument("--check-regression", action="store_true",
+                    dest="check_regression",
+                    help="fail (exit 1) when any engine column regresses "
+                         f">{GATE_FACTOR}x vs the last committed row for "
+                         "the same (config, n_clients)")
     ap.add_argument("--out", default=os.path.join(OUT_DIR, "sim_speed.csv"))
     args = ap.parse_args()
     if args.quick:
-        args.clients, args.rounds, args.repeats = [4], 5, 2
+        # min-of-5 even in quick mode: the gate compares floors, and a
+        # 2-sample floor on a shared-tenancy box is still ~40% noisy
+        args.clients, args.rounds, args.repeats = [4], 5, 5
 
+    prev = last_committed_rows(args.out)
+    sha, ts = git_sha(), now_iso()
     rows = []
     for n in args.clients:
         configs = [("lm-tiny", make_lm_tiny)]
@@ -125,25 +223,29 @@ def main():
                 return sim, 8
             configs.append(("cnn", lambda **kw: make_cnn(**kw)))
         for name, factory in configs:
-            ms = {}
-            for engine in ENGINES:
-                sim, b = factory(n_clients=n, engine=engine)
-                ms[engine] = time_rounds(sim, args.rounds, b,
-                                         repeats=args.repeats) * 1e3
+            ms = time_engines(factory, n, args.rounds, args.repeats)
             vec_speedup = ms["legacy"] / ms["vectorized"]
             scan_speedup = ms["vectorized"] / ms["scan"]
             rows.append([name, n, round(ms["legacy"], 1),
                          round(ms["vectorized"], 1), round(ms["scan"], 1),
-                         round(vec_speedup, 2), round(scan_speedup, 2)])
+                         round(vec_speedup, 2), round(scan_speedup, 2),
+                         sha, ts])
             print(f"{name:8s} N={n:3d}  loop {ms['legacy']:8.1f} ms/round  "
                   f"vectorized {ms['vectorized']:8.1f} ms/round  "
                   f"scan {ms['scan']:8.1f} ms/round  "
                   f"vec {vec_speedup:5.2f}x  scan +{scan_speedup:5.2f}x",
                   flush=True)
-    append_csv(args.out,
-               ["config", "n_clients", "loop_ms", "vectorized_ms",
-                "scan_ms", "vec_speedup", "scan_speedup"],
-               rows)
+    append_csv(args.out, HEADER, rows)
+    if args.check_regression:
+        failures, warnings = check_regression(prev, rows)
+        if warnings:
+            print("perf gate warnings:\n  " + "\n  ".join(warnings),
+                  file=sys.stderr)
+        if failures:
+            print("PERF REGRESSION:\n  " + "\n  ".join(failures),
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"perf gate OK ({len(rows)} row(s) vs committed trajectory)")
 
 
 if __name__ == "__main__":

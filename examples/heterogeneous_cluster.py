@@ -3,7 +3,6 @@ one device gets progressively weaker (the straggler scenario).
 
     PYTHONPATH=src python examples/heterogeneous_cluster.py
 """
-import numpy as np
 
 from repro.config import get_config, SFLConfig, DeviceProfile
 from repro.core.profiles import model_profile

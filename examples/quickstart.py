@@ -6,7 +6,7 @@ import numpy as np
 
 from repro.config import get_config, SFLConfig
 from repro.core.profiles import model_profile
-from repro.core.latency import sample_devices, LatencyModel
+from repro.core.latency import sample_devices
 from repro.core.bcd import HASFLOptimizer
 from repro.core.sfl import SFLEdgeSimulator
 from repro.core import baselines

@@ -3,7 +3,6 @@
 
     PYTHONPATH=src python examples/serve_batch.py --arch qwen3-1.7b
 """
-import argparse
 import sys
 
 from repro.launch.serve import main as serve_main

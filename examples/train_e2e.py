@@ -12,7 +12,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import get_config, reduced
 from repro.core.sfl import make_hasfl_train_step

@@ -6,8 +6,8 @@ static args) and cheap to copy via `dataclasses.replace`.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration

@@ -1,4 +1,4 @@
-"""Benchmark policies from Section VII.
+"""Benchmark policies from Section VII, plus the fixed classics.
 
 - RBS : random batch size in [1, 64] per device per (re)configuration
 - RMS : random cut layer per device
@@ -8,13 +8,29 @@
 - HABS / HAMS : the paper's heterogeneity-aware BS / MS (Section VI),
   exposed by running one sub-problem of the BCD with the other variable
   fixed to the benchmark policy.
+- FIXED / FIXED-BS / FIXED-MS : the non-adaptive classics the scenario
+  sweeps compare against (cf. MergeSFL's fixed-BS and AdaptSFL's
+  fixed-split ablations): ``fixed`` keeps a uniform (b, cut) forever;
+  ``fixed-bs`` keeps b uniform but re-optimizes the cuts (HAMS);
+  ``fixed-ms`` keeps the cut uniform but re-optimizes batch sizes
+  (HABS).  Driven through a time-varying scenario they quantify exactly
+  what closing each half of the control loop buys.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.bcd import HASFLOptimizer
+from repro.core.latency import BW_FLOOR, FLOPS_FLOOR
 from repro.core.ms_opt import MSProblem
+
+# uniform defaults for the fixed policies (paper-scale: b=16 is the BCD
+# initializer; the cut sits at the first quarter like the BCD's start)
+FIXED_B = 16
+
+
+def fixed_cut(n_layers: int) -> int:
+    return max(1, n_layers // 4)
 
 
 def rbs(n: int, rng: np.random.Generator, max_batch: int = 64) -> np.ndarray:
@@ -32,8 +48,11 @@ def rhams(opt: HASFLOptimizer, b: np.ndarray) -> np.ndarray:
     n = len(opt.devices)
     cuts = np.zeros(n, int)
     for i, dev in enumerate(opt.devices):
-        t_client = b[i] * (p.rho + p.bwd) / dev.flops
-        t_comm = b[i] * (p.psi / dev.up_bw + p.chi / dev.down_bw)
+        f = max(dev.flops, FLOPS_FLOOR)
+        up = max(dev.up_bw, BW_FLOOR)
+        down = max(dev.down_bw, BW_FLOOR)
+        t_client = b[i] * (p.rho + p.bwd) / f
+        t_comm = b[i] * (p.psi / up + p.chi / down)
         t_server = b[i] * ((p.rho[-1] - p.rho) + (p.bwd[-1] - p.bwd)) \
             / opt.sfl.server_flops
         cuts[i] = int(np.argmin(t_client + t_comm + t_server)) + 1
@@ -76,4 +95,12 @@ def policy(name: str, opt: HASFLOptimizer, rng: np.random.Generator):
     if name == "rbs+rhams":
         b = rbs(n, rng, opt.sfl.max_batch)
         return b, rhams(opt, b)
+    if name == "fixed":
+        return np.full(n, FIXED_B), np.full(n, fixed_cut(l))
+    if name == "fixed-bs":
+        b = np.full(n, FIXED_B)
+        return b, hams(opt, b)
+    if name == "fixed-ms":
+        cuts = np.full(n, fixed_cut(l))
+        return habs(opt, cuts), cuts
     raise ValueError(f"unknown policy {name!r}")

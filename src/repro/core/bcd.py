@@ -35,10 +35,20 @@ class HASFLOptimizer:
     def __init__(self, profile: LayerProfile, devices: Sequence[DeviceProfile],
                  sfl: SFLConfig, conv: Optional[ConvergenceModel] = None):
         self.profile = profile
-        self.devices = list(devices)
         self.sfl = sfl
         self.conv = conv or ConvergenceModel(profile, sfl)
         self.lat = LatencyModel(profile, devices, sfl)
+        self.devices = self.lat.devices
+
+    def set_devices(self, devices: Sequence[DeviceProfile]) -> None:
+        """Re-point the reused optimizer at the current device pool.
+
+        The online control loop (`repro.scenarios.controller`) calls this
+        at every reconfiguration boundary instead of rebuilding the
+        optimizer, then warm-starts `solve` from the previous decision.
+        """
+        self.lat.set_devices(devices)
+        self.devices = self.lat.devices
 
     # ------------------------------------------------------------------
     def _bs_problem(self, cuts: np.ndarray, b_ref: np.ndarray) -> BSProblem:
@@ -56,10 +66,12 @@ class HASFLOptimizer:
         t5 = max(float(np.max(rl.t_c_up)), rl.t_s_up)
         t6 = max(float(np.max(rl.t_c_down)), rl.t_s_down)
         d = t3 + t4 + (t5 + t6) / sfl.agg_interval
-        # caps kappa_i (memory C4 + straggler caps R3/R4)
-        f = np.array([dv.flops for dv in self.devices])
-        r_up = np.array([dv.up_bw for dv in self.devices])
-        r_down = np.array([dv.down_bw for dv in self.devices])
+        # caps kappa_i (memory C4 + straggler caps R3/R4); the floored
+        # arrays keep the caps finite when a scenario trace drives a
+        # device's resources to zero (the cap then collapses to b_i = 1)
+        f = self.lat._f
+        r_up = self.lat._r_up
+        r_down = self.lat._r_down
         mem = np.array([dv.memory for dv in self.devices])
         psi_cum, chi_cum = np.cumsum(p.psi), np.cumsum(p.chi)
         opt_bits = p.delta[j] * (1 + sfl.optimizer_state_mult)
@@ -94,10 +106,10 @@ class HASFLOptimizer:
             if self.theta(b_new, cuts) <= history[-1] or \
                     not np.isfinite(history[-1]):
                 b = b_new
-            # --- MS step (Dinkelbach) -----------------------------------
+            # --- MS step (Dinkelbach, warm-started from current cuts) ---
             ms = MSProblem(self.profile, self.devices, self.sfl, self.conv,
                            np.asarray(b, float))
-            cuts_new = ms.solve()
+            cuts_new = ms.solve(cuts0=np.asarray(cuts, int))
             if self.theta(b, cuts_new) <= self.theta(b, cuts):
                 cuts = cuts_new
             history.append(self.theta(b, cuts))

@@ -93,7 +93,6 @@ def estimate_constants(grad_samples: list, param_deltas=None,
                   (np arrays).  Returns dict with per-layer sigma_sq, g_sq
                   and (if deltas given) beta.
     """
-    n_batches = len(grad_samples)
     n_layers = len(grad_samples[0])
     g_sq = np.zeros(n_layers)
     sigma_sq = np.zeros(n_layers)

@@ -47,13 +47,42 @@ class RoundLatency:
                 + max(float(np.max(self.t_c_down)), self.t_s_down))
 
 
+# Resource floors: time-varying scenario traces (repro.scenarios) can
+# drive a device's bandwidth or compute to zero during an outage burst;
+# dividing by the raw value would make every max_i straggler term (and
+# the BCD objective) infinite/NaN.  Clamping to a tiny floor keeps the
+# objective finite-but-enormous, so the optimizer steers work away from
+# the dead device instead of collapsing.
+BW_FLOOR = 1.0        # bit/s
+FLOPS_FLOOR = 1.0     # FLOP/s
+
+
 class LatencyModel:
     def __init__(self, profile: LayerProfile, devices: Sequence[DeviceProfile],
                  sfl: SFLConfig):
         self.profile = profile
-        self.devices = list(devices)
         self.sfl = sfl
+        self.set_devices(devices)
+
+    def set_devices(self, devices: Sequence[DeviceProfile]) -> None:
+        """Per-round profile injection point: swap the device pool in place.
+
+        The per-device resource arrays are cached here (with the outage
+        floors applied) so a scenario-driven simulation can re-inject
+        profiles every round without rebuilding them per latency query.
+        """
+        self.devices = list(devices)
         self.n = len(self.devices)
+        self._f = np.maximum(
+            np.array([d.flops for d in self.devices]), FLOPS_FLOOR)
+        self._r_up = np.maximum(
+            np.array([d.up_bw for d in self.devices]), BW_FLOOR)
+        self._r_down = np.maximum(
+            np.array([d.down_bw for d in self.devices]), BW_FLOOR)
+        self._rf_up = np.maximum(
+            np.array([d.fed_up_bw for d in self.devices]), BW_FLOOR)
+        self._rf_down = np.maximum(
+            np.array([d.fed_down_bw for d in self.devices]), BW_FLOOR)
 
     # ------------------------------------------------------------------
     def round_latency(self, b: np.ndarray, cuts: np.ndarray) -> RoundLatency:
@@ -61,11 +90,11 @@ class LatencyModel:
         p = self.profile
         b = np.asarray(b, float)
         j = np.asarray(cuts, int) - 1
-        f = np.array([d.flops for d in self.devices])
-        r_up = np.array([d.up_bw for d in self.devices])
-        r_down = np.array([d.down_bw for d in self.devices])
-        rf_up = np.array([d.fed_up_bw for d in self.devices])
-        rf_down = np.array([d.fed_down_bw for d in self.devices])
+        f = self._f
+        r_up = self._r_up
+        r_down = self._r_down
+        rf_up = self._rf_up
+        rf_down = self._rf_down
 
         t_f = b * p.rho[j] / f                                    # (28)
         t_a_up = b * p.psi[j] / r_up                              # (29)

@@ -36,14 +36,19 @@ class MSProblem:
     eps: Optional[float] = None
 
     def __post_init__(self):
+        from repro.core.latency import BW_FLOOR, FLOPS_FLOOR
         p, devs = self.profile, self.devices
         n, l = len(devs), p.n_layers
         b = np.asarray(self.b, float)
-        f = np.array([d.flops for d in devs])[:, None]
-        r_up = np.array([d.up_bw for d in devs])[:, None]
-        r_down = np.array([d.down_bw for d in devs])[:, None]
-        rf_up = np.array([d.fed_up_bw for d in devs])[:, None]
-        rf_down = np.array([d.fed_down_bw for d in devs])[:, None]
+        # same outage floors as LatencyModel: a zero-resource device
+        # (scenario trace) yields finite-but-huge table entries, so the
+        # solver steers its cut shallow instead of degenerating to the
+        # infeasibility fallback
+        f = np.maximum([d.flops for d in devs], FLOPS_FLOOR)[:, None]
+        r_up = np.maximum([d.up_bw for d in devs], BW_FLOOR)[:, None]
+        r_down = np.maximum([d.down_bw for d in devs], BW_FLOOR)[:, None]
+        rf_up = np.maximum([d.fed_up_bw for d in devs], BW_FLOOR)[:, None]
+        rf_down = np.maximum([d.fed_down_bw for d in devs], BW_FLOOR)[:, None]
         bb = b[:, None]
         # [N, L] tables over candidate cuts
         self.t3 = bb * (p.rho[None, :] / f + p.psi[None, :] / r_up)
@@ -120,12 +125,26 @@ class MSProblem:
                 break
         return cuts
 
-    def solve(self, max_dinkelbach: int = 20, tol: float = 1e-9) -> np.ndarray:
-        """Dinkelbach outer loop; exact enumeration of L_c inside."""
+    def solve(self, max_dinkelbach: int = 20, tol: float = 1e-9,
+              cuts0: Optional[np.ndarray] = None) -> np.ndarray:
+        """Dinkelbach outer loop; exact enumeration of L_c inside.
+
+        ``cuts0`` warm-starts lambda at Num/Den of the previous decision
+        (any feasible point is a valid Dinkelbach initializer): when the
+        environment moved only a little since the last solve — the online
+        reconfiguration case — the first parametric step already lands at
+        the optimum and the loop exits after one confirmation iteration.
+        """
         l = self.profile.n_layers
-        # initial feasible point: shallowest memory-feasible cut everywhere
         lam = None
         best_cuts, best_theta = None, float("inf")
+        if cuts0 is not None:
+            cuts0 = np.asarray(cuts0, int)
+            mem_ok = bool(np.all(
+                self.mem_ok[np.arange(len(cuts0)), cuts0 - 1]))
+            if mem_ok and self.den(cuts0) > 0:
+                best_cuts, best_theta = cuts0.copy(), self.theta(cuts0)
+                lam = self.num(cuts0) / self.den(cuts0)
         for _ in range(max_dinkelbach):
             # parametric step: minimize Num - lam*Den over (cuts, L_c)
             cand_best, cand_val = None, float("inf")

@@ -21,7 +21,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.config import ModelConfig, CNN, MOE, SSM, HYBRID, AUDIO
+from repro.config import ModelConfig, CNN
 from repro.models.transformer import layer_program
 
 

@@ -28,7 +28,6 @@ simulation exact rather than approximate).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
@@ -36,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, SFLConfig, DeviceProfile, CNN
+from repro.config import SFLConfig, DeviceProfile, CNN
 from repro.core.latency import LatencyModel
 from repro.core.profiles import LayerProfile
 from repro.core import split as SP
@@ -139,6 +138,7 @@ class SFLEdgeSimulator:
         self.profile = profile
         self.lat = LatencyModel(profile, devices, sfl)
         self.n = len(devices)
+        self.available = np.ones(self.n, bool)
         self.rng = np.random.default_rng(seed)
         if engine is None:
             engine = "vectorized" if vectorized else "legacy"
@@ -338,17 +338,50 @@ class SFLEdgeSimulator:
                     self._client_units[i][u] = mean_u
         return jnp.stack(losses)
 
+    # -- scenario injection ---------------------------------------------------
+    def set_devices(self, devices: Sequence[DeviceProfile],
+                    available=None) -> None:
+        """Inject the current (possibly trace-evolved) device pool.
+
+        Updates the latency model in place so both the wall-clock
+        accounting and any controller reading ``sim.devices`` at the next
+        reconfiguration boundary observe the same environment state.  The
+        pool size must stay N (fixed-cohort formulation; churn is modeled
+        as outage — DESIGN.md §9).
+        """
+        if len(devices) != self.n:
+            raise ValueError(
+                f"device pool must stay size {self.n}, got {len(devices)}")
+        self.devices = list(devices)
+        self.lat.set_devices(self.devices)
+        self.available = (np.ones(self.n, bool) if available is None
+                          else np.asarray(available, bool))
+
+    def _scenario_tick(self, scenario, t: int) -> None:
+        """Advance the environment to round ``t``'s trace state."""
+        if scenario is not None:
+            self.set_devices(scenario.profiles_at(t),
+                             scenario.available_at(t))
+
     # -- main loop ------------------------------------------------------------
     def run(self, policy_fn: Callable, rounds: int, eval_every: int = 10,
             reconfigure_every: Optional[int] = None,
-            verbose: bool = False) -> SimResult:
-        """policy_fn(sim, rng) -> (b [N], cuts_layers [N])."""
+            verbose: bool = False, scenario=None) -> SimResult:
+        """policy_fn(sim, rng) -> (b [N], cuts_layers [N]).
+
+        ``scenario`` (a `repro.scenarios.Scenario`) makes the environment
+        time-varying: each round's latency is evaluated on that round's
+        trace state, and the state is left injected when ``policy_fn``
+        fires at a reconfiguration boundary — closing the control loop
+        (observe -> re-optimize -> apply) for every engine.
+        """
         reconf = reconfigure_every or self.sfl.agg_interval
         if self.engine == "scan":
             return self._run_scan(policy_fn, rounds, eval_every, reconf,
-                                  verbose)
+                                  verbose, scenario)
         res = SimResult()
         clock = 0.0
+        self._scenario_tick(scenario, 0)
         b, cuts = policy_fn(self, self.rng)
         self._record_policy(res, b, cuts)
         n_units_total = len(self.units)
@@ -373,6 +406,7 @@ class SFLEdgeSimulator:
                 client_idx = self._client_slice(l_c_units)
                 losses = self._legacy_round(b, cuts, client_idx, do_agg)
 
+            self._scenario_tick(scenario, t)
             clock += self.lat.t_split(b, cuts)
             if do_agg:
                 clock += self.lat.t_agg(b, cuts)
@@ -415,7 +449,7 @@ class SFLEdgeSimulator:
                   f"acc {float(ta):.4f}", flush=True)
 
     def _run_scan(self, policy_fn: Callable, rounds: int, eval_every: int,
-                  reconf: int, verbose: bool) -> SimResult:
+                  reconf: int, verbose: bool, scenario=None) -> SimResult:
         """Segment scheduler for the scan engine.
 
         Chops the round range at eval / reconfiguration boundaries (the
@@ -423,10 +457,13 @@ class SFLEdgeSimulator:
         traced counter), pre-draws each segment's gather plan from the
         authoritative host RNG, and dispatches one donated scan per
         segment.  Metrics, clock accounting, and policy calls replicate
-        the per-round engines exactly.
+        the per-round engines exactly — under a scenario the clock walks
+        the segment's rounds against the same per-round trace states (and
+        float summation order) the per-round engines use.
         """
         res = SimResult()
         clock = 0.0
+        self._scenario_tick(scenario, 0)
         b, cuts = policy_fn(self, self.rng)
         self._record_policy(res, b, cuts)
         n_units_total = len(self.units)
@@ -447,13 +484,21 @@ class SFLEdgeSimulator:
                 masks, self.store.arrays)
 
             # clock: accumulate round-by-round on host (bitwise-identical
-            # float summation to the per-round engines)
-            t_split = self.lat.t_split(b, cuts)
-            t_agg = self.lat.t_agg(b, cuts)
-            for r in range(t + 1, nxt + 1):
-                clock += t_split
-                if r % self.sfl.agg_interval == 0:
-                    clock += t_agg
+            # float summation to the per-round engines); static pools
+            # hoist the per-round latency out of the loop
+            if scenario is None:
+                t_split = self.lat.t_split(b, cuts)
+                t_agg = self.lat.t_agg(b, cuts)
+                for r in range(t + 1, nxt + 1):
+                    clock += t_split
+                    if r % self.sfl.agg_interval == 0:
+                        clock += t_agg
+            else:
+                for r in range(t + 1, nxt + 1):
+                    self._scenario_tick(scenario, r)
+                    clock += self.lat.t_split(b, cuts)
+                    if r % self.sfl.agg_interval == 0:
+                        clock += self.lat.t_agg(b, cuts)
             t = nxt
 
             b, cuts = self._maybe_reconfigure(res, policy_fn, t, reconf,

@@ -14,7 +14,7 @@ Two granularities:
 """
 from __future__ import annotations
 
-from typing import Callable, List, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,6 @@ from __future__ import annotations
 from typing import Callable, Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import axis_size, dp_axes

@@ -1,10 +1,6 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """q: [B, Sq, Hq, hd]; k, v: [B, Sk, Hkv, hd] -> [B, Sq, Hq, hd]."""

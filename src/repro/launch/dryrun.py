@@ -18,17 +18,15 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import (get_config, INPUT_SHAPES, InputShape, ModelConfig,
-                          AUDIO, SSM, HYBRID)
+                          SSM)
 from repro.configs.input_shapes import input_specs
 from repro.models import build_model
 from repro.core.sfl import make_hasfl_train_step
 from repro.dist.sharding import (state_shardings, batch_shardings,
-                                 cache_shardings, make_shard_fn,
-                                 make_rep_shard_fn)
+                                 cache_shardings, make_shard_fn)
 from repro.launch.mesh import make_production_mesh
 from repro.launch import roofline as RL
 

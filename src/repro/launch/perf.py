@@ -15,7 +15,6 @@ import argparse
 import json
 
 import jax
-import numpy as np
 
 from repro.launch import dryrun as DR
 
@@ -39,7 +38,6 @@ def _baseline():
 def _ce2048():
     """Hypothesis: larger CE chunks cut scan overhead (fewer dispatches of
     the [chunk, vocab] matmul) at the cost of peak memory."""
-    import repro.models.factory as F
     # monkeypatch chunk size via module constant: factory reads CE_CHUNK
     # from closure; easiest lever is rebuilding models after editing the
     # source constant — handled by reading env var instead.
@@ -103,8 +101,6 @@ def _cache_repl():
     -> ~0, memory term up ~2-3x; net win while mem < old coll."""
     import repro.dist.sharding as SH
     from jax.sharding import NamedSharding, PartitionSpec as P
-
-    orig = SH.cache_shardings
 
     def cache_shardings(cache, mesh):
         dp = SH._dp_axes(mesh)

@@ -46,16 +46,26 @@ def run_edge(args) -> None:
                     lr=args.lr)
     profile = model_profile(cfg)
     devices = sample_devices(args.clients, rng)
-    opt = HASFLOptimizer(profile, devices, sfl)
-
-    def policy(sim, prng):
-        return baselines.policy(args.policy, opt, prng)
 
     sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
                            devices, sfl, profile, seed=args.seed,
                            engine=args.engine)
+    scenario = None
+    if args.scenario:
+        # time-varying environment + online re-optimization at every
+        # reconfiguration boundary (the closed control loop, DESIGN.md §9)
+        from repro.scenarios import make_scenario, make_controller
+        scenario = make_scenario(args.scenario, devices,
+                                 seed=args.scenario_seed)
+        policy = make_controller(args.policy, profile, sfl, seed=args.seed)
+    else:
+        opt = HASFLOptimizer(profile, devices, sfl)
+
+        def policy(sim, prng):
+            return baselines.policy(args.policy, opt, prng)
+
     res = sim.run(policy, rounds=args.rounds, eval_every=args.eval_every,
-                  verbose=True)
+                  verbose=True, scenario=scenario)
     print(f"final acc={res.test_acc[-1]:.4f} "
           f"converged_time={res.converged_time():.1f}s "
           f"simulated_clock={res.clock[-1]:.1f}s")
@@ -122,6 +132,11 @@ def main():
     ap.add_argument("--engine", default="scan",
                     choices=["legacy", "vectorized", "scan"],
                     help="edge-simulator round engine (DESIGN.md §8)")
+    ap.add_argument("--scenario", default=None,
+                    help="time-varying edge scenario preset (edge mode; "
+                         "see repro.scenarios.list_presets)")
+    ap.add_argument("--scenario-seed", type=int, default=7,
+                    dest="scenario_seed")
     ap.add_argument("--n-train", type=int, default=2000, dest="n_train")
     ap.add_argument("--n-test", type=int, default=400, dest="n_test")
     ap.add_argument("--csv", default=None)

@@ -6,7 +6,6 @@ sequences (the jnp analogue of the Pallas flash kernel in kernels/).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

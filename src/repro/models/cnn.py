@@ -95,7 +95,6 @@ def cnn_forward_layers(params: list, x: jax.Array, cfg: ModelConfig,
         if kind == "conv":
             conv_seen += 1
             if not active:
-                prev_channels = p["w"].shape[-1]
                 continue
             if cfg.residual and "proj" not in p and x.shape[-1] == p["w"].shape[-1]:
                 x = jax.nn.relu(_conv(p, x) + x)

@@ -5,13 +5,12 @@ One entry point for all 12 architectures (10 assigned + 2 paper CNNs).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.config import ModelConfig, AUDIO, VLM, CNN
+from repro.config import ModelConfig, VLM, CNN
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models import cnn as C

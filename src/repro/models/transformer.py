@@ -17,13 +17,11 @@ edge simulator at any layer, via per-layer forward).
 from __future__ import annotations
 
 import functools
-from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.config import ModelConfig, DENSE, MOE, SSM, HYBRID, AUDIO, VLM
+from repro.config import ModelConfig, MOE, SSM, HYBRID, AUDIO
 from repro.models import layers as L
 from repro.models import attention as A
 from repro.models import moe as M
@@ -412,7 +410,6 @@ def stack_decode(stacked: dict, caches: dict, x: jax.Array, cfg: ModelConfig,
 def stack_prefill(stacked: dict, caches: dict, x: jax.Array, cfg: ModelConfig,
                   program, ctx: dict):
     """Run the full sequence and emit per-layer caches for decode."""
-    s = x.shape[1]
 
     def body(x, xs):
         rep_params, rep_cache = xs

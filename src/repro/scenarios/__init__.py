@@ -1,0 +1,35 @@
+"""Time-varying edge scenarios + the online HASFL control loop."""
+
+from repro.scenarios.traces import (
+    Churn,
+    ComputeJitter,
+    Diurnal,
+    MarkovBursts,
+    RayleighFading,
+    Scenario,
+    Trace,
+)
+from repro.scenarios.presets import PRESETS, list_presets, make_scenario
+from repro.scenarios.controller import (
+    BaselineController,
+    HASFLController,
+    estimate_profile_constants,
+    make_controller,
+)
+
+__all__ = [
+    "Churn",
+    "ComputeJitter",
+    "Diurnal",
+    "MarkovBursts",
+    "RayleighFading",
+    "Scenario",
+    "Trace",
+    "PRESETS",
+    "list_presets",
+    "make_scenario",
+    "BaselineController",
+    "HASFLController",
+    "estimate_profile_constants",
+    "make_controller",
+]

@@ -135,6 +135,97 @@ def test_estimate_constants_shapes():
     assert np.all(out["g_sq"] >= out["sigma_sq"] * 0)  # non-negative
 
 
+def test_latency_cut_at_L_empty_server_side(setup):
+    """Cut at L: the server computes nothing — Eqns 30/31 must be exactly
+    zero and the round time still finite/positive (client side + comms)."""
+    _, prof, sfl, devs, _ = setup
+    lat = LatencyModel(prof, devs, sfl)
+    cuts = np.full(20, prof.n_layers)
+    rl = lat.round_latency(np.full(20, 16), cuts)
+    assert rl.t_s_f == 0.0 and rl.t_s_b == 0.0
+    assert np.isfinite(rl.t_split) and rl.t_split > 0
+    assert np.isfinite(rl.t_agg) and rl.t_agg > 0
+
+
+def test_latency_every_round_aggregation(setup):
+    """I=1: aggregation happens every round, so Eq. 40 degenerates to
+    R*(T_S + T_A) and the BCD numerator pays T_A undivided."""
+    _, prof, _, devs, _ = setup
+    sfl1 = SFLConfig(agg_interval=1)
+    lat = LatencyModel(prof, devs, sfl1)
+    b, cuts = np.full(20, 16), np.full(20, 8)
+    rl = lat.round_latency(b, cuts)
+    assert lat.total(b, cuts, 7) == pytest.approx(
+        7 * (rl.t_split + rl.t_agg))
+    assert lat.per_round_effective(b, cuts) == pytest.approx(
+        rl.t_split + rl.t_agg)
+
+
+def test_latency_zero_bandwidth_finite_objective(setup):
+    """A dead device (scenario outage: zero bandwidth AND zero compute)
+    must yield a finite round latency and a finite BCD objective — the
+    straggler max terms absorb the floored (huge) per-device times."""
+    _, prof, sfl, _, _ = setup
+    dead = DeviceProfile(0.0, 0.0, 0.0, 0.0, 0.0, 8 * 4e9)
+    ok = DeviceProfile(1.5e12, 77e6, 370e6, 77e6, 370e6, 8 * 4e9)
+    devs = [dead] + [ok] * 7
+    lat = LatencyModel(prof, devs, sfl)
+    b, cuts = np.full(8, 16), np.full(8, 8)
+    rl = lat.round_latency(b, cuts)
+    assert np.isfinite(rl.t_split) and np.isfinite(rl.t_agg)
+    # the dead device is the straggler on both max terms
+    assert int(np.argmax(rl.t_f + rl.t_a_up)) == 0
+    opt = HASFLOptimizer(prof, devs, sfl)
+    assert np.isfinite(opt.theta(b, cuts))
+    # ... and the solve stays finite with the dead device never assigned
+    # more work than any healthy one (its straggler caps bind at b_ref)
+    d = opt.solve()
+    assert np.isfinite(d.theta)
+    assert d.b[0] <= np.min(d.b[1:])
+
+
+def test_optimizer_solve_deterministic(setup):
+    """Repeated solves (same inputs, fixed seed pool) must be bitwise
+    reproducible — the online control loop depends on it for the
+    tri-engine decision-stream equivalence."""
+    _, prof, sfl, devs, _ = setup
+    d1 = HASFLOptimizer(prof, devs, sfl).solve()
+    d2 = HASFLOptimizer(prof, devs, sfl).solve()
+    np.testing.assert_array_equal(d1.b, d2.b)
+    np.testing.assert_array_equal(d1.cuts, d2.cuts)
+    assert d1.theta == d2.theta
+    # same instance, solved twice (reuse path)
+    opt = HASFLOptimizer(prof, devs, sfl)
+    e1, e2 = opt.solve(), opt.solve()
+    np.testing.assert_array_equal(e1.b, e2.b)
+    np.testing.assert_array_equal(e1.cuts, e2.cuts)
+
+
+def test_optimizer_warm_start_reuse(setup):
+    """set_devices + warm-started solve: the reused optimizer tracks a
+    changed pool, and warm-starting never degrades the objective below
+    its own starting point (BCD only accepts improvements)."""
+    _, prof, sfl, devs, rng = setup
+    opt = HASFLOptimizer(prof, devs, sfl)
+    d_cold = opt.solve()
+    # degrade half the pool's uplink 10x, reuse the optimizer
+    new_devs = []
+    for i, d in enumerate(devs):
+        if i % 2 == 0:
+            import dataclasses
+            d = dataclasses.replace(d, up_bw=d.up_bw / 10.0)
+        new_devs.append(d)
+    opt.set_devices(new_devs)
+    d_warm = opt.solve(b0=d_cold.b, cuts0=d_cold.cuts, max_iter=4)
+    assert np.isfinite(d_warm.theta)
+    assert d_warm.theta <= opt.theta(d_cold.b, d_cold.cuts) * (1 + 1e-9)
+    # the decision must match a fresh optimizer given the same start
+    d_fresh = HASFLOptimizer(prof, new_devs, sfl).solve(
+        b0=d_cold.b, cuts0=d_cold.cuts, max_iter=4)
+    np.testing.assert_array_equal(d_warm.b, d_fresh.b)
+    np.testing.assert_array_equal(d_warm.cuts, d_fresh.cuts)
+
+
 def test_uniform_devices_uniform_batches(setup):
     """On a homogeneous cluster HASFL degenerates to ~uniform b_i
     (the pod sanity property from DESIGN.md §2)."""

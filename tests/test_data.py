@@ -1,7 +1,7 @@
 """Data pipeline tests."""
 import numpy as np
 
-from repro.data import (make_cifar_like, make_lm_data, partition_iid,
+from repro.data import (make_cifar_like, make_lm_data,
                         partition_noniid_shards, ClientSampler)
 
 

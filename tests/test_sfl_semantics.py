@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import get_config, reduced, SFLConfig
 from repro.core.profiles import model_profile
@@ -36,7 +35,7 @@ def test_edge_sim_aggregation_schedule():
         return np.full(s.n, 8), np.full(s.n, 3)
 
     # run manually round by round
-    res = sim.run(policy, rounds=3, eval_every=3)
+    sim.run(policy, rounds=3, eval_every=3)
     l_c_units = 3
     # after round 3 (== I), client prefix units identical
     for u in range(l_c_units):

@@ -10,8 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import get_config, reduced, InputShape
-from repro.configs.input_shapes import input_specs
+from repro.config import get_config, reduced
 from repro.core.sfl import make_hasfl_train_step
 from repro.dist.sharding import (auto_param_spec, state_shardings,
                                  batch_shardings, cache_shardings)

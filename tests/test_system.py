@@ -1,6 +1,5 @@
 """End-to-end behaviour tests for the HASFL system."""
 import numpy as np
-import pytest
 
 from repro.config import get_config, SFLConfig
 from repro.core.profiles import model_profile
