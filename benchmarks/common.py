@@ -9,11 +9,12 @@ models on the synthetic CIFAR-like data.
 from __future__ import annotations
 
 import datetime
+import hashlib
 import os
+import platform
+import socket
 import subprocess
 import time
-
-import numpy as np
 
 from repro.utils.cache import enable_compilation_cache
 
@@ -21,15 +22,10 @@ from repro.utils.cache import enable_compilation_cache
 # so repeated runs skip compilation (REPRO_JAX_CACHE overrides the path)
 enable_compilation_cache()
 
+from repro.api import ExperimentSpec, Session  # noqa: E402
 from repro.config import get_config, SFLConfig  # noqa: E402
 from repro.core.profiles import model_profile  # noqa: E402
-from repro.core.latency import sample_devices  # noqa: E402
-from repro.core.bcd import HASFLOptimizer  # noqa: E402
-from repro.core.sfl import SFLEdgeSimulator  # noqa: E402
 from repro.core import baselines  # noqa: E402
-from repro.models import build_model  # noqa: E402
-from repro.data import (make_cifar_like, partition_iid,  # noqa: E402
-                        partition_noniid_shards, ClientSampler)
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 
@@ -40,31 +36,44 @@ def full_profile(arch: str = "vgg16-cifar"):
     return model_profile(get_config(arch))
 
 
-def make_sim(*, n_clients=8, iid=False, agg_interval=15, lr=0.05,
-             n_train=1200, n_test=300, seed=0, arch="vgg9-cifar-small",
-             n_classes=10, vectorized=True, engine=None):
-    """``engine=None`` auto-picks: the round-scan engine for the default
+def make_spec(
+    *, n_clients=8, iid=False, agg_interval=15, lr=0.05,
+    n_train=1200, n_test=300, seed=0, arch="vgg9-cifar-small",
+    engine=None, **overrides
+) -> ExperimentSpec:
+    """The benchmark harness's historical `make_sim` wiring, as a spec."""
+    return ExperimentSpec(
+        arch=arch, n_clients=n_clients,
+        partition="iid" if iid else "noniid-shards",
+        n_train=n_train, n_test=n_test, seed=seed, engine=engine,
+        sfl=SFLConfig(n_devices=n_clients, agg_interval=agg_interval, lr=lr),
+        **overrides)
+
+
+def make_sim(
+    *, n_clients=8, iid=False, agg_interval=15, lr=0.05,
+    n_train=1200, n_test=300, seed=0, arch="vgg9-cifar-small",
+    n_classes=10, vectorized=True, engine=None
+):
+    """Build (simulator, optimizer) through `repro.api.Session`.
+
+    ``engine=None`` auto-picks: the round-scan engine for the default
     vectorized path (what every paper-figure driver wants — fastest and
-    equivalent), the legacy loop when ``vectorized=False``."""
+    equivalent), the legacy loop when ``vectorized=False``.  Figure
+    drivers that sweep policies themselves keep using this; grid-shaped
+    sweeps should build `ExperimentSpec`s (see `make_spec`) and go
+    through `Session.run_grid`.
+    """
     if engine is None:
         engine = "scan" if vectorized else "legacy"
-    cfg = get_config(arch)
-    model = build_model(cfg)
-    rng = np.random.default_rng(seed)
-    (xtr, ytr), (xte, yte) = make_cifar_like(
-        cfg.n_classes, n_train, n_test, cfg.image_size, seed=seed)
-    if iid:
-        shards = partition_iid(len(ytr), n_clients, rng)
-    else:
-        shards = partition_noniid_shards(ytr, n_clients, rng)
-    sampler = ClientSampler({"images": xtr, "labels": ytr}, shards, rng)
-    sfl = SFLConfig(n_devices=n_clients, agg_interval=agg_interval, lr=lr)
-    prof = model_profile(cfg)
-    devs = sample_devices(n_clients, rng)
-    sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
-                           devs, sfl, prof, seed=seed, engine=engine)
-    opt = HASFLOptimizer(prof, devs, sfl)
-    return sim, opt
+    sess = Session(
+        make_spec(
+            n_clients=n_clients, iid=iid, agg_interval=agg_interval, lr=lr,
+            n_train=n_train, n_test=n_test, seed=seed, arch=arch,
+            engine=engine,
+        )
+    )
+    return sess.sim, sess.optimizer
 
 
 def run_policy(sim, opt, name, rounds, eval_every=10):
@@ -108,17 +117,42 @@ def git_sha() -> str:
     """Short git SHA of the working tree (trajectory-row provenance);
     empty string outside a repo so benchmarks still run from tarballs."""
     try:
-        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
-                             capture_output=True, text=True, timeout=10,
-                             cwd=os.path.dirname(os.path.abspath(__file__)))
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))
+        )
         return out.stdout.strip() if out.returncode == 0 else ""
     except (OSError, subprocess.SubprocessError):
         return ""
 
 
 def now_iso() -> str:
-    return datetime.datetime.now(datetime.timezone.utc) \
-        .strftime("%Y-%m-%dT%H:%M:%SZ")
+    fmt = "%Y-%m-%dT%H:%M:%SZ"
+    return datetime.datetime.now(datetime.timezone.utc).strftime(fmt)
+
+
+def runner_id() -> str:
+    """Stable hostname+CPU fingerprint for trajectory-CSV rows.
+
+    Absolute-ms columns are only comparable between rows measured on the
+    same box; the perf gate currently fails solely on the box-invariant
+    speedup ratios, and this column is what will later let it match
+    absolute-ms rows same-box.  Comma-free so it drops straight into the
+    CSVs.
+    """
+    cpu = platform.processor() or platform.machine() or "unknown"
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    cpu = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    fp = hashlib.sha1(f"{cpu}|{os.cpu_count()}".encode()).hexdigest()[:8]
+    host = socket.gethostname().split(".")[0].replace(",", "_")
+    return f"{host}-{fp}"
 
 
 def append_csv(path: str, header: list, rows: list) -> None:

@@ -19,8 +19,7 @@ def main(quick: bool = False):
     for iid in (True, False):
         tag = "iid" if iid else "noniid"
         # ---- Fig 10: BS ablation (cuts fixed) --------------------------
-        for scheme in (["habs", 8, 16] if quick
-                       else ["habs", 8, 16, 32]):
+        for scheme in (["habs", 8, 16] if quick else ["habs", 8, 16, 32]):
             sim, opt = make_sim(n_clients=n_clients, iid=iid, seed=2)
             l_c = 4
 
@@ -30,14 +29,14 @@ def main(quick: bool = False):
                     return baselines.habs(opt, cuts), cuts
                 return np.full(s.n, int(_s)), cuts
 
-            res = sim.run(policy, rounds=rounds,
-                          eval_every=max(5, rounds // 8))
+            res = sim.run(policy, rounds=rounds, eval_every=max(5, rounds // 8))
             name = scheme if scheme == "habs" else f"fixed_b{scheme}"
-            emit(f"fig10_{tag}_{name}", 0.0,
-                 f"final_acc={res.test_acc[-1]:.4f};"
-                 f"converged_time={res.converged_time():.2f}s")
-            rows.append(["fig10", tag, name, res.test_acc[-1],
-                         res.converged_time()])
+            emit(
+                f"fig10_{tag}_{name}", 0.0,
+                f"final_acc={res.test_acc[-1]:.4f};"
+                f"converged_time={res.converged_time():.2f}s"
+            )
+            rows.append(["fig10", tag, name, res.test_acc[-1], res.converged_time()])
         # ---- Fig 11: MS ablation (b fixed = 16) ------------------------
         for scheme in (["hams", 2, 6] if quick else ["hams", 2, 4, 6]):
             sim, opt = make_sim(n_clients=n_clients, iid=iid, seed=2)
@@ -48,17 +47,18 @@ def main(quick: bool = False):
                     return b, baselines.hams(opt, b)
                 return b, np.full(s.n, int(_s))
 
-            res = sim.run(policy, rounds=rounds,
-                          eval_every=max(5, rounds // 8))
+            res = sim.run(policy, rounds=rounds, eval_every=max(5, rounds // 8))
             name = scheme if scheme == "hams" else f"fixed_Lc{scheme}"
-            emit(f"fig11_{tag}_{name}", 0.0,
-                 f"final_acc={res.test_acc[-1]:.4f};"
-                 f"converged_time={res.converged_time():.2f}s")
-            rows.append(["fig11", tag, name, res.test_acc[-1],
-                         res.converged_time()])
-    save_csv(f"{OUT_DIR}/fig10_11.csv",
-             ["figure", "setting", "scheme", "final_acc",
-              "converged_time_s"], rows)
+            emit(
+                f"fig11_{tag}_{name}", 0.0,
+                f"final_acc={res.test_acc[-1]:.4f};"
+                f"converged_time={res.converged_time():.2f}s"
+            )
+            rows.append(["fig11", tag, name, res.test_acc[-1], res.converged_time()])
+    save_csv(
+        f"{OUT_DIR}/fig10_11.csv",
+        ["figure", "setting", "scheme", "final_acc", "converged_time_s"], rows
+    )
 
 
 if __name__ == "__main__":

@@ -11,8 +11,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (make_sim, full_profile, emit, save_csv,
-                               OUT_DIR)
+from benchmarks.common import (make_sim, full_profile, emit, save_csv, OUT_DIR)
 from repro.config import SFLConfig
 from repro.core.latency import LatencyModel, sample_devices
 
@@ -22,8 +21,7 @@ def main(quick: bool = False):
     rows = []
     # (a) accuracy vs rounds for fixed batch sizes
     for b in (8, 16, 32):
-        sim, opt = make_sim(n_clients=4 if quick else 8, iid=False,
-                            agg_interval=15)
+        sim, opt = make_sim(n_clients=4 if quick else 8, iid=False, agg_interval=15)
         l_c = 4
 
         def policy(s, rng, _b=b):
@@ -32,12 +30,13 @@ def main(quick: bool = False):
         t0 = time.time()
         res = sim.run(policy, rounds=rounds, eval_every=max(5, rounds // 8))
         us = (time.time() - t0) / rounds * 1e6
-        emit(f"fig2a_acc_b{b}", us,
-             f"final_acc={res.test_acc[-1]:.4f};clock={res.clock[-1]:.2f}s")
+        emit(
+            f"fig2a_acc_b{b}", us,
+            f"final_acc={res.test_acc[-1]:.4f};clock={res.clock[-1]:.2f}s"
+        )
         for r, a, c in zip(res.rounds, res.test_acc, res.clock):
             rows.append([f"b={b}", r, a, c])
-    save_csv(f"{OUT_DIR}/fig2a.csv", ["series", "round", "acc", "clock"],
-             rows)
+    save_csv(f"{OUT_DIR}/fig2a.csv", ["series", "round", "acc", "clock"], rows)
 
     # (b) per-round latency vs b — full VGG-16 profile, Table-I devices
     prof = full_profile("vgg16-cifar")

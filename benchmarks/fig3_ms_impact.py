@@ -19,22 +19,23 @@ def main(quick: bool = False):
     rows = []
     for j in range(1, prof.n_layers + 1):
         client_flops = prof.rho[j - 1] + prof.bwd[j - 1]
-        server_flops = (prof.rho[-1] - prof.rho[j - 1]
-                        + prof.bwd[-1] - prof.bwd[j - 1])
+        server_flops = (prof.rho[-1] - prof.rho[j - 1] + prof.bwd[-1] - prof.bwd[j - 1])
         comm_bits = prof.psi[j - 1] + prof.chi[j - 1]
-        rows.append([j, client_flops, server_flops, comm_bits,
-                     prof.delta[j - 1]])
-    save_csv(f"{OUT_DIR}/fig3b.csv",
-             ["cut", "client_flops", "server_flops", "act_bits_per_sample",
-              "submodel_bits"], rows)
+        rows.append([j, client_flops, server_flops, comm_bits, prof.delta[j - 1]])
+    save_csv(
+        f"{OUT_DIR}/fig3b.csv",
+        [
+            "cut", "client_flops", "server_flops", "act_bits_per_sample",
+            "submodel_bits"
+        ], rows
+    )
     emit("fig3b_overheads", 0.0, f"cuts={prof.n_layers}")
 
     # (a) accuracy vs rounds for different cut depths (b=16, I=15)
     rounds = 30 if quick else 60
     rows_a = []
     for l_c in (2, 4, 6):
-        sim, opt = make_sim(n_clients=4 if quick else 8, iid=False,
-                            agg_interval=15)
+        sim, opt = make_sim(n_clients=4 if quick else 8, iid=False, agg_interval=15)
 
         def policy(s, rng, _c=l_c):
             return np.full(s.n, 16), np.full(s.n, _c)

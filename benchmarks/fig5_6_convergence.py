@@ -4,8 +4,7 @@ from __future__ import annotations
 
 
 
-from benchmarks.common import (make_sim, run_policy, emit, save_csv,
-                               POLICIES, OUT_DIR)
+from benchmarks.common import (make_sim, run_policy, emit, save_csv, POLICIES, OUT_DIR)
 
 
 def main(quick: bool = False):
@@ -16,23 +15,31 @@ def main(quick: bool = False):
     for iid in (True, False):
         tag = "iid" if iid else "noniid"
         for name in (POLICIES if not quick else POLICIES[:4:3] + ["rbs+rms"]):
-            sim, opt = make_sim(n_clients=n_clients, iid=iid,
-                                agg_interval=15, seed=1)
-            res, wall = run_policy(sim, opt, name, rounds,
-                                   eval_every=max(5, rounds // 10))
-            emit(f"fig5_{tag}_{name}", wall / rounds * 1e6,
-                 f"final_acc={res.test_acc[-1]:.4f};"
-                 f"converged_time={res.converged_time():.2f}s;"
-                 f"clock={res.clock[-1]:.2f}s")
+            sim, opt = make_sim(n_clients=n_clients, iid=iid, agg_interval=15, seed=1)
+            res, wall = run_policy(
+                sim, opt, name, rounds,
+                eval_every=max(5, rounds // 10)
+            )
+            emit(
+                f"fig5_{tag}_{name}", wall / rounds * 1e6,
+                f"final_acc={res.test_acc[-1]:.4f};"
+                f"converged_time={res.converged_time():.2f}s;"
+                f"clock={res.clock[-1]:.2f}s"
+            )
             for r, a, c in zip(res.rounds, res.test_acc, res.clock):
                 rows.append([tag, name, r, a, c])
-            summary.append([tag, name, res.test_acc[-1],
-                            res.converged_time(), res.clock[-1]])
-    save_csv(f"{OUT_DIR}/fig5_curves.csv",
-             ["setting", "policy", "round", "acc", "clock"], rows)
-    save_csv(f"{OUT_DIR}/fig6_summary.csv",
-             ["setting", "policy", "final_acc", "converged_time_s",
-              "total_clock_s"], summary)
+            summary.append([
+                tag, name, res.test_acc[-1],
+                res.converged_time(), res.clock[-1]
+            ])
+    save_csv(
+        f"{OUT_DIR}/fig5_curves.csv",
+        ["setting", "policy", "round", "acc", "clock"], rows
+    )
+    save_csv(
+        f"{OUT_DIR}/fig6_summary.csv",
+        ["setting", "policy", "final_acc", "converged_time_s", "total_clock_s"], summary
+    )
 
 
 if __name__ == "__main__":

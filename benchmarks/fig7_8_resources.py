@@ -8,8 +8,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (full_profile, emit, save_csv, POLICIES,
-                               OUT_DIR, robust_theta)
+from benchmarks.common import (
+    full_profile, emit, save_csv, POLICIES,
+    OUT_DIR, robust_theta
+)
 from repro.config import SFLConfig
 from repro.core.bcd import HASFLOptimizer
 from repro.core import baselines
@@ -28,8 +30,10 @@ def main(quick: bool = False):
     rows = []
     # Fig 7a: scale device compute f_i
     for scale in (0.5, 0.75, 1.0, 1.5, 2.0):
-        devs = sample_devices(20, np.random.default_rng(1),
-                              flops_range=(1e12 * scale, 2e12 * scale))
+        devs = sample_devices(
+            20, np.random.default_rng(1),
+            flops_range=(1e12 * scale, 2e12 * scale)
+        )
         opt = HASFLOptimizer(prof, devs, sfl)
         for name in POLICIES:
             th = theta_for(opt, name, rng)
@@ -37,34 +41,32 @@ def main(quick: bool = False):
     # Fig 7b: scale server compute f_s
     for scale in (0.5, 1.0, 2.0, 4.0):
         devs = sample_devices(20, np.random.default_rng(1))
-        opt = HASFLOptimizer(prof, devs,
-                             SFLConfig(server_flops=20e12 * scale))
+        opt = HASFLOptimizer(prof, devs, SFLConfig(server_flops=20e12 * scale))
         for name in POLICIES:
-            rows.append(["fig7b_server", scale, name,
-                         theta_for(opt, name, rng)])
+            rows.append(["fig7b_server", scale, name, theta_for(opt, name, rng)])
     # Fig 8a: scale device uplink
     for scale in (0.5, 0.75, 1.0, 1.5, 2.0):
-        devs = sample_devices(20, np.random.default_rng(1),
-                              up_range=(75e6 * scale, 80e6 * scale))
+        devs = sample_devices(
+            20, np.random.default_rng(1),
+            up_range=(75e6 * scale, 80e6 * scale)
+        )
         opt = HASFLOptimizer(prof, devs, sfl)
         for name in POLICIES:
-            rows.append(["fig8a_uplink", scale, name,
-                         theta_for(opt, name, rng)])
+            rows.append(["fig8a_uplink", scale, name, theta_for(opt, name, rng)])
     # Fig 8b: scale inter-server rate
     for scale in (0.25, 0.5, 1.0, 2.0):
         devs = sample_devices(20, np.random.default_rng(1))
-        opt = HASFLOptimizer(prof, devs,
-                             SFLConfig(server_fed_bw=370e6 * scale))
+        opt = HASFLOptimizer(prof, devs, SFLConfig(server_fed_bw=370e6 * scale))
         for name in POLICIES:
-            rows.append(["fig8b_interserver", scale, name,
-                         theta_for(opt, name, rng)])
-    save_csv(f"{OUT_DIR}/fig7_8.csv",
-             ["sweep", "scale", "policy", "theta_s"], rows)
+            rows.append(["fig8b_interserver", scale, name, theta_for(opt, name, rng)])
+    save_csv(f"{OUT_DIR}/fig7_8.csv", ["sweep", "scale", "policy", "theta_s"], rows)
     # headline: HASFL robustness = ratio of its worst/best theta
     h = [r[3] for r in rows if r[2] == "hasfl" and r[0] == "fig7a_flops"]
     r_ = [r[3] for r in rows if r[2] == "rbs+rms" and r[0] == "fig7a_flops"]
-    emit("fig7_robustness", 0.0,
-         f"hasfl_spread={max(h)/min(h):.2f};rbsrms_spread={max(r_)/min(r_):.2f}")
+    emit(
+        "fig7_robustness", 0.0,
+        f"hasfl_spread={max(h)/min(h):.2f};rbsrms_spread={max(r_)/min(r_):.2f}"
+    )
 
 
 if __name__ == "__main__":

@@ -4,8 +4,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (full_profile, emit, save_csv, POLICIES,
-                               OUT_DIR, robust_theta)
+from benchmarks.common import (
+    full_profile, emit, save_csv, POLICIES,
+    OUT_DIR, robust_theta
+)
 from repro.config import SFLConfig
 from repro.core.bcd import HASFLOptimizer
 from repro.core import baselines
@@ -25,8 +27,7 @@ def main(quick: bool = False):
             rows.append([n, name, robust_theta(opt, b, cuts)])
     save_csv(f"{OUT_DIR}/fig9.csv", ["n_devices", "policy", "theta_s"], rows)
     h20 = [r for r in rows if r[1] == "hasfl"]
-    emit("fig9_scaling", 0.0,
-         ";".join(f"N={r[0]}:{r[2]:.0f}s" for r in h20))
+    emit("fig9_scaling", 0.0, ";".join(f"N={r[0]}:{r[2]:.0f}s" for r in h20))
 
 
 if __name__ == "__main__":

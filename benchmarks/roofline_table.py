@@ -27,8 +27,7 @@ PEAK = 197e12
 
 def fmt_row(r: dict) -> str:
     if r.get("status") == "skipped":
-        return (f"{r['arch']:27s} {r['shape']:12s} SKIPPED "
-                f"({r['reason'][:60]}...)")
+        return (f"{r['arch']:27s} {r['shape']:12s} SKIPPED " f"({r['reason'][:60]}...)")
     if r.get("status") != "ok":
         return f"{r['arch']:27s} {r['shape']:12s} ERROR {r.get('error','')[:60]}"
     rf = r["roofline"]
@@ -39,35 +38,39 @@ def fmt_row(r: dict) -> str:
         # MODEL_FLOPS compute term (marked *)
         t_comp = rf["model_flops"] / (r.get("chips", CHIPS) * PEAK)
         star = "*"
-    terms = {"compute": t_comp, "memory": rf["t_memory_s"],
-             "collective": rf["t_collective_s"]}
+    terms = {
+        "compute": t_comp, "memory": rf["t_memory_s"],
+        "collective": rf["t_collective_s"]
+    }
     bott = max(terms, key=terms.get)
     useful = rf["useful_flops_frac"]
-    return (f"{r['arch']:27s} {r['shape']:12s} "
-            f"comp={t_comp:.3e}s{star} mem={rf['t_memory_s']:.3e}s "
-            f"coll={rf['t_collective_s']:.3e}s -> {bott:10s} "
-            f"useful={min(useful, 9.99):.2f}{star} "
-            f"fits={r['fits_v5e_16g']}")
+    return (
+        f"{r['arch']:27s} {r['shape']:12s} "
+        f"comp={t_comp:.3e}s{star} mem={rf['t_memory_s']:.3e}s "
+        f"coll={rf['t_collective_s']:.3e}s -> {bott:10s} "
+        f"useful={min(useful, 9.99):.2f}{star} "
+        f"fits={r['fits_v5e_16g']}"
+    )
 
 
 def main(quick: bool = False):
     recs = load_records("single")
     if not recs:
-        emit("roofline_table", 0.0,
-             "no dry-run records yet (run python -m repro.launch.dryrun)")
+        emit(
+            "roofline_table", 0.0,
+            "no dry-run records yet (run python -m repro.launch.dryrun)"
+        )
         return
     print("=== Roofline (single pod, 256 chips; v5e constants) ===")
     for r in recs:
         print(fmt_row(r))
     ok = [r for r in recs if r.get("status") == "ok"]
     fits = sum(1 for r in ok if r["fits_v5e_16g"])
-    emit("roofline_table", 0.0,
-         f"records={len(recs)};ok={len(ok)};fits_16g={fits}")
+    emit("roofline_table", 0.0, f"records={len(recs)};ok={len(ok)};fits_16g={fits}")
     multi = load_records("multi")
     ok_m = sum(1 for r in multi if r.get("status") == "ok")
     skip_m = sum(1 for r in multi if r.get("status") == "skipped")
-    emit("multipod_dryrun", 0.0,
-         f"records={len(multi)};ok={ok_m};skipped={skip_m}")
+    emit("multipod_dryrun", 0.0, f"records={len(multi)};ok={ok_m};skipped={skip_m}")
 
 
 if __name__ == "__main__":

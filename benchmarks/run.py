@@ -24,9 +24,11 @@ BENCHES = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="reduced rounds/clients (still exercises every "
-                         "figure)")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="reduced rounds/clients (still exercises every "
+             "figure)"
+    )
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
 

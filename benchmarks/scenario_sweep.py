@@ -1,27 +1,51 @@
 """Scenario sweep: the closed HASFL control loop vs. fixed baselines
-over time-varying edge scenarios.
+over time-varying edge scenarios, run as a declarative spec grid.
 
-For every (preset, policy) cell the simulator runs the *same* data
-stream and the same trace stream (scenarios are re-seeded identically),
-so differences are pure policy effects.  Policies re-decide (b, cuts) at
-every reconfiguration boundary against the scenario's current state
-("hasfl" also re-estimates G²/σ² online); the wall clock charges every
-round the Eq. 28-40 latency of that round's trace state.
+The sweep is a policy x preset grid of `repro.api.ExperimentSpec` cells
+(committed next to the CSV as ``<out>.specs.json``).  Every cell shares
+the same data stream and trace stream (scenarios are re-seeded
+identically), so differences are pure policy effects.  Policies
+re-decide (b, cuts) at every reconfiguration boundary against the
+scenario's current state ("hasfl" also re-estimates G²/σ² online); the
+wall clock charges every round the Eq. 28-40 latency of that round's
+trace state.
+
+Runners (``--runner``):
+
+- ``grid`` (default): `Session.run_grid` — compatible cells stack on a
+  leading grid axis and execute as vmapped mega-runs over the scan
+  engine's donated carry (DESIGN.md §10); bitwise-identical to
+  sequential, measurably faster wall-clock.
+- ``sequential``: one `Session.run()` per cell — the pre-grid loop,
+  kept as the reference and for non-scan engines.
+- ``--bench-grid`` runs *both*, asserts per-cell bitwise equivalence
+  (decision streams, clocks, eval losses), and logs both runners' wall
+  clocks to the CSV — the recorded grid-vs-sequential speedup.
 
 Outputs:
 - ``experiments/bench/scenario_sweep.csv`` — full eval trajectories
-  (preset, policy, round, clock, losses, acc), appended per run with git
-  provenance.
+  (preset, policy, round, clock, losses, acc), appended per run with
+  git provenance plus the runner kind and its sweep wall-clock.
 - a printed time-to-target-loss summary per preset: target = the worst
   best-loss across policies (everyone provably reaches it), time = the
   simulated clock at the first eval at or under the target.
 
-CI runs ``--smoke`` (2 presets x {hasfl, fixed, fixed-ms}, N=8): it
-asserts HASFL reaches the target strictly faster than both baselines on
-``flaky-uplink`` and exits nonzero otherwise — the headline adaptivity
-claim, gated.
+CI runs ``--smoke`` (2 presets x {hasfl, fixed, fixed-ms}, N=8,
+sequential runner — the result is runner-independent and CNN cells are
+CPU-compute-bound, see below): it asserts HASFL reaches the target
+strictly faster than both baselines on ``flaky-uplink`` and exits
+nonzero otherwise — the headline adaptivity claim, gated.
+
+Measured regimes (this box, committed wall_s rows): the grid runner is
+about the dispatch/host-overhead economy, so it wins where cells are
+small and numerous — smollm-tiny 6-cell grid: 2.02x warm (1.20x with
+cold vmapped compiles) — and *loses* on CPU-conv-bound CNN cells
+(vgg9 smoke grid: 0.76x; XLA CPU lowers the cell-vmapped per-client
+convs to slow grouped convolutions).  Pick ``--runner`` accordingly;
+equivalence is bitwise either way.
 
     PYTHONPATH=src python benchmarks/scenario_sweep.py [--smoke]
+    PYTHONPATH=src python benchmarks/scenario_sweep.py --bench-grid
 """
 from __future__ import annotations
 
@@ -30,8 +54,23 @@ import os
 import sys
 import time
 
+import numpy as np
+
 sys.path.insert(0, os.path.dirname(__file__))
-from common import make_sim, append_csv, git_sha, now_iso, OUT_DIR  # noqa: E402
+from common import (
+    make_spec, append_csv, git_sha, now_iso,  # noqa: E402
+    OUT_DIR
+)
+
+# runner = which executor produced the row (sequential | grid); wall_s =
+# that runner invocation's whole-sweep wall-clock (grid amortizes cells,
+# so per-cell attribution is undefined); arch = the cells' model (empty
+# in pre-PR-4 rows: vgg9-cifar-small).  Old files are prefix-migrated.
+HEADER = [
+    "preset", "policy", "n_clients", "round", "clock", "train_loss",
+    "test_loss", "test_acc", "git_sha", "timestamp", "runner",
+    "wall_s", "arch"
+]
 
 
 def time_to_target(res, target: float) -> float:
@@ -42,49 +81,165 @@ def time_to_target(res, target: float) -> float:
     return float("inf")
 
 
-def run_cell(preset: str, policy: str, args):
-    from repro.scenarios import make_scenario, make_controller
+def build_specs(args) -> list:
+    """The policy x preset grid, one spec per cell (row-major: preset
+    outer, policy inner — the CSV/summary iteration order)."""
+    from repro.config import get_config
 
-    sim, _ = make_sim(n_clients=args.clients, iid=args.iid, seed=args.seed,
-                      agg_interval=args.agg_interval, engine=args.engine)
-    scenario = make_scenario(preset, sim.devices, seed=args.scenario_seed)
-    ctrl = make_controller(policy, sim.profile, sim.sfl,
-                           estimate=not args.no_estimate, seed=args.seed)
+    # token archs train on synthetic LM data, which is IID-only
+    iid = args.iid or not get_config(args.arch).is_cnn
+    return [
+        make_spec(
+            arch=args.arch, n_clients=args.clients, iid=iid,
+            seed=args.seed, agg_interval=args.agg_interval,
+            engine=None if args.engine == "auto" else args.engine,
+            policy=policy, estimate=not args.no_estimate,
+            scenario=preset, scenario_seed=args.scenario_seed,
+            rounds=args.rounds, eval_every=args.eval_every,
+            reconfigure_every=args.reconf_every,
+            seq_len=args.seq_len)
+        for preset in args.presets
+        for policy in args.policies
+    ]
+
+
+def run_sequential(specs) -> tuple:
+    """One Session per cell, run in order; returns (results, wall_s)."""
+    from repro.api import Session
+
     t0 = time.time()
-    res = sim.run(ctrl, rounds=args.rounds, eval_every=args.eval_every,
-                  reconfigure_every=args.reconf_every, scenario=scenario)
+    results = []
+    for spec in specs:
+        t_cell = time.time()
+        res = Session(spec).run()
+        print(
+            f"{spec.scenario:18s} {spec.policy:10s} "
+            f"clock={res.clock[-1]:10.1f}s "
+            f"best_loss={min(res.test_loss):.4f} "
+            f"acc={res.test_acc[-1]:.4f} "
+            f"wall={time.time() - t_cell:.0f}s", flush=True
+        )
+        results.append(res)
+    return results, time.time() - t0
+
+
+def run_grid(specs) -> tuple:
+    """All cells through `Session.run_grid`; returns (results, wall_s)."""
+    from repro.api import Session
+
+    t0 = time.time()
+    results = Session.run_grid(specs)
     wall = time.time() - t0
-    print(f"{preset:18s} {policy:10s} clock={res.clock[-1]:10.1f}s "
-          f"best_loss={min(res.test_loss):.4f} "
-          f"acc={res.test_acc[-1]:.4f} wall={wall:.0f}s", flush=True)
-    return res
+    for spec, res in zip(specs, results):
+        print(
+            f"{spec.scenario:18s} {spec.policy:10s} "
+            f"clock={res.clock[-1]:10.1f}s "
+            f"best_loss={min(res.test_loss):.4f} "
+            f"acc={res.test_acc[-1]:.4f} [grid]", flush=True
+        )
+    return results, wall
+
+
+def assert_equivalent(specs, seq_results, grid_results) -> None:
+    """The grid runner's contract: bitwise-identical per-cell streams."""
+    for spec, a, b in zip(specs, seq_results, grid_results):
+        cell = f"{spec.scenario}/{spec.policy}"
+        assert a.rounds == b.rounds, cell
+        assert a.clock == b.clock, f"{cell}: clock streams diverge"
+        assert a.train_loss == b.train_loss, f"{cell}: train losses diverge"
+        assert a.test_loss == b.test_loss, f"{cell}: eval losses diverge"
+        assert a.test_acc == b.test_acc, f"{cell}: accuracies diverge"
+        assert len(a.b_history) == len(b.b_history), \
+            f"{cell}: decision stream lengths diverge"
+        assert len(a.cut_history) == len(b.cut_history), \
+            f"{cell}: decision stream lengths diverge"
+        for x, y in zip(a.b_history, b.b_history):
+            assert np.array_equal(x, y), f"{cell}: b decisions diverge"
+        for x, y in zip(a.cut_history, b.cut_history):
+            assert np.array_equal(x, y), f"{cell}: cut decisions diverge"
+    print(f"grid == sequential (bitwise) on {len(specs)} cells")
+
+
+def append_rows(specs, results, runner, wall, sha, ts, rows) -> None:
+    for spec, res in zip(specs, results):
+        for k, r in enumerate(res.rounds):
+            rows.append([
+                spec.scenario, spec.policy, spec.n_clients, r,
+                round(res.clock[k], 3),
+                round(res.train_loss[k], 5),
+                round(res.test_loss[k], 5),
+                round(res.test_acc[k], 5), sha, ts, runner,
+                round(wall, 1), spec.arch
+            ])
+
+
+def summarize(args, specs, results) -> dict:
+    summary = {}
+    by_preset = {}
+    for spec, res in zip(specs, results):
+        by_preset.setdefault(spec.scenario, {})[spec.policy] = res
+    for preset in args.presets:
+        cells = by_preset[preset]
+        target = max(min(r.test_loss) for r in cells.values())
+        summary[preset] = {p: time_to_target(r, target) for p, r in cells.items()}
+        print(
+            f"--- {preset}: target test_loss {target:.4f}; "
+            "time-to-target "
+            + "  ".join(
+                f"{p}={summary[preset][p]:.1f}s"
+                for p in args.policies
+            ), flush=True
+        )
+    return summary
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--presets", nargs="*",
-                    default=["stable", "flaky-uplink", "straggler-bursts"])
-    ap.add_argument("--policies", nargs="*",
-                    default=["hasfl", "fixed", "fixed-bs", "fixed-ms"])
+    ap.add_argument(
+        "--presets", nargs="*",
+        default=["stable", "flaky-uplink", "straggler-bursts"]
+    )
+    ap.add_argument(
+        "--policies", nargs="*",
+        default=["hasfl", "fixed", "fixed-bs", "fixed-ms"]
+    )
+    ap.add_argument(
+        "--arch", default="vgg9-cifar-small",
+        help="any registered arch; token archs (e.g. smollm-tiny) run "
+             "the dispatch-bound LM regime on synthetic data")
+    ap.add_argument("--seq-len", type=int, default=32, dest="seq_len")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--eval-every", type=int, default=5, dest="eval_every")
     ap.add_argument("--reconf-every", type=int, default=5, dest="reconf_every")
     ap.add_argument("--agg-interval", type=int, default=5, dest="agg_interval")
-    ap.add_argument("--engine", default="scan",
-                    choices=["legacy", "vectorized", "scan"])
+    ap.add_argument(
+        "--engine", default="auto",
+        choices=["auto", "legacy", "vectorized", "scan"]
+    )
+    ap.add_argument("--runner", default="grid", choices=["grid", "sequential"])
+    ap.add_argument(
+        "--bench-grid", action="store_true", dest="bench_grid",
+        help="run BOTH runners, assert bitwise equivalence, "
+             "and log both wall-clocks (the recorded "
+             "grid-vs-sequential speedup)"
+    )
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--scenario-seed", type=int, default=7,
-                    dest="scenario_seed")
-    ap.add_argument("--non-iid", dest="iid", action="store_false",
-                    help="shard-based non-IID partitioning (default: IID)")
-    ap.add_argument("--no-estimate", action="store_true", dest="no_estimate",
-                    help="skip online G²/σ² estimation (priors only)")
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: 2 presets x 3 policies, asserts the "
-                         "flaky-uplink adaptivity win")
-    ap.add_argument("--out",
-                    default=os.path.join(OUT_DIR, "scenario_sweep.csv"))
+    ap.add_argument("--scenario-seed", type=int, default=7, dest="scenario_seed")
+    ap.add_argument(
+        "--non-iid", dest="iid", action="store_false",
+        help="shard-based non-IID partitioning (default: IID)"
+    )
+    ap.add_argument(
+        "--no-estimate", action="store_true", dest="no_estimate",
+        help="skip online G²/σ² estimation (priors only)"
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI mode: 2 presets x 3 policies, asserts the "
+             "flaky-uplink adaptivity win"
+    )
+    ap.add_argument("--out", default=os.path.join(OUT_DIR, "scenario_sweep.csv"))
     args = ap.parse_args()
     if args.smoke:
         args.presets = ["stable", "flaky-uplink"]
@@ -92,44 +247,61 @@ def main():
         args.clients, args.rounds = max(args.clients, 8), 24
         args.eval_every = args.reconf_every = args.agg_interval = 4
 
-    sha, ts = git_sha(), now_iso()
-    rows, summary = [], {}
-    for preset in args.presets:
-        results = {}
-        for policy in args.policies:
-            res = run_cell(preset, policy, args)
-            results[policy] = res
-            for k, r in enumerate(res.rounds):
-                rows.append([preset, policy, args.clients, r,
-                             round(res.clock[k], 3),
-                             round(res.train_loss[k], 5),
-                             round(res.test_loss[k], 5),
-                             round(res.test_acc[k], 5), sha, ts])
-        target = max(min(r.test_loss) for r in results.values())
-        summary[preset] = {p: time_to_target(r, target)
-                           for p, r in results.items()}
-        print(f"--- {preset}: target test_loss {target:.4f}; "
-              "time-to-target "
-              + "  ".join(f"{p}={summary[preset][p]:.1f}s"
-                          for p in args.policies), flush=True)
+    specs = build_specs(args)
+    # the sweep's cells share one engine; non-scan engines cannot batch,
+    # so rows must not claim runner=grid for what executes sequentially
+    if specs[0].resolved_engine != "scan":
+        if args.bench_grid:
+            ap.error("--bench-grid requires a scan-capable engine "
+                     "(--engine auto or scan)")
+        if args.runner == "grid":
+            print("note: non-scan engine — cells run sequentially; "
+                  "rows will be labeled accordingly", flush=True)
+            args.runner = "sequential"
+    from repro.api import save_specs
 
-    append_csv(args.out,
-               ["preset", "policy", "n_clients", "round", "clock",
-                "train_loss", "test_loss", "test_acc", "git_sha",
-                "timestamp"],
-               rows)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    save_specs(args.out + ".specs.json", specs)
+
+    sha, ts = git_sha(), now_iso()
+    rows = []
+    if args.bench_grid:
+        seq_results, seq_wall = run_sequential(specs)
+        grid_results, grid_wall = run_grid(specs)
+        assert_equivalent(specs, seq_results, grid_results)
+        print(
+            f"sweep wall-clock: sequential {seq_wall:.1f}s, "
+            f"grid {grid_wall:.1f}s "
+            f"({seq_wall / grid_wall:.2f}x)", flush=True
+        )
+        append_rows(specs, seq_results, "sequential", seq_wall, sha, ts, rows)
+        append_rows(specs, grid_results, "grid", grid_wall, sha, ts, rows)
+        results = grid_results
+    elif args.runner == "grid":
+        results, wall = run_grid(specs)
+        print(f"sweep wall-clock: grid {wall:.1f}s", flush=True)
+        append_rows(specs, results, "grid", wall, sha, ts, rows)
+    else:
+        results, wall = run_sequential(specs)
+        print(f"sweep wall-clock: sequential {wall:.1f}s", flush=True)
+        append_rows(specs, results, "sequential", wall, sha, ts, rows)
+
+    summary = summarize(args, specs, results)
+    append_csv(args.out, HEADER, rows)
 
     if args.smoke:
         tt = summary["flaky-uplink"]
-        losers = [p for p in args.policies
-                  if p != "hasfl" and tt["hasfl"] >= tt[p]]
+        losers = [p for p in args.policies if p != "hasfl" and tt["hasfl"] >= tt[p]]
         if losers:
-            print(f"SMOKE FAIL: hasfl time-to-target {tt['hasfl']:.1f}s not "
-                  f"better than {losers} ({tt})", file=sys.stderr)
+            print(
+                f"SMOKE FAIL: hasfl time-to-target {tt['hasfl']:.1f}s not "
+                f"better than {losers} ({tt})", file=sys.stderr
+            )
             sys.exit(1)
-        print(f"SMOKE OK: hasfl {tt['hasfl']:.1f}s beats "
-              + ", ".join(f"{p} {tt[p]:.1f}s"
-                          for p in args.policies if p != "hasfl"))
+        print(
+            f"SMOKE OK: hasfl {tt['hasfl']:.1f}s beats "
+            + ", ".join(f"{p} {tt[p]:.1f}s" for p in args.policies if p != "hasfl")
+        )
 
 
 if __name__ == "__main__":

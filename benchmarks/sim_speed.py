@@ -33,12 +33,20 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(__file__))
-from common import (make_sim, append_csv, git_sha, now_iso,  # noqa: E402
-                    OUT_DIR)
+from common import (
+    make_sim, append_csv, git_sha, now_iso,  # noqa: E402
+    runner_id, OUT_DIR
+)
 
 ENGINES = ["legacy", "vectorized", "scan"]
-HEADER = ["config", "n_clients", "loop_ms", "vectorized_ms", "scan_ms",
-          "vec_speedup", "scan_speedup", "git_sha", "timestamp"]
+# runner_id (hostname+CPU fingerprint) identifies the measuring box so
+# the perf gate can later match absolute-ms rows same-box; pre-existing
+# rows are prefix-migrated (padded empty) by append_csv.
+HEADER = [
+    "config", "n_clients", "loop_ms", "vectorized_ms", "scan_ms",
+    "vec_speedup", "scan_speedup", "git_sha", "timestamp",
+    "runner_id"
+]
 # The CI gate *fails* on the speedup-ratio columns: new_ratio vs the
 # committed ratio is algebraically the absolute engine slowdown
 # normalized by the legacy engine's slowdown in the same run, so a
@@ -113,9 +121,11 @@ def check_regression(prev: dict, rows: list) -> tuple:
     return failures, warnings
 
 
-def make_lm_sim(*, n_clients: int, engine: str, batch: int = 4,
-                seq: int = 32, n_layers: int = 2, d_model: int = 64,
-                vocab: int = 256):
+def make_lm_sim(
+    *, n_clients: int, engine: str, batch: int = 4,
+    seq: int = 32, n_layers: int = 2, d_model: int = 64,
+    vocab: int = 256
+):
     from repro.config import get_config, reduced, SFLConfig
     from repro.core.latency import sample_devices
     from repro.core.profiles import model_profile
@@ -123,26 +133,34 @@ def make_lm_sim(*, n_clients: int, engine: str, batch: int = 4,
     from repro.data import make_lm_data, partition_iid, ClientSampler
     from repro.models import build_model
 
-    cfg = reduced(get_config("smollm-135m"), n_layers=n_layers,
-                  d_model=d_model, n_heads=2, n_kv_heads=1,
-                  d_ff=4 * d_model, vocab_size=vocab)
+    cfg = reduced(
+        get_config("smollm-135m"), n_layers=n_layers,
+        d_model=d_model, n_heads=2, n_kv_heads=1,
+        d_ff=4 * d_model, vocab_size=vocab
+    )
     model = build_model(cfg)
     tokens, labels = make_lm_data(cfg.vocab_size, 1200, seq, seed=0)
     shards = partition_iid(len(tokens), n_clients, np.random.default_rng(0))
-    sampler = ClientSampler({"tokens": tokens, "labels": labels}, shards,
-                            np.random.default_rng(1))
+    sampler = ClientSampler(
+        {"tokens": tokens, "labels": labels}, shards,
+        np.random.default_rng(1)
+    )
     sfl = SFLConfig(n_devices=n_clients, agg_interval=5, lr=0.05)
     devs = sample_devices(n_clients, np.random.default_rng(0))
     prof = model_profile(get_config("vgg16-cifar"))   # latency model only
-    sim = SFLEdgeSimulator(model, sampler,
-                           {"tokens": tokens[:64], "labels": labels[:64]},
-                           devs, sfl, prof, seed=0, engine=engine)
+    sim = SFLEdgeSimulator(
+        model, sampler,
+        {"tokens": tokens[:64], "labels": labels[:64]},
+        devs, sfl, prof, seed=0, engine=engine
+    )
     return sim, batch
 
 
 def make_lm_tiny(*, n_clients: int, engine: str):
-    return make_lm_sim(n_clients=n_clients, engine=engine,
-                       batch=2, seq=16, n_layers=1, d_model=32, vocab=128)
+    return make_lm_sim(
+        n_clients=n_clients, engine=engine,
+        batch=2, seq=16, n_layers=1, d_model=32, vocab=128
+    )
 
 
 def _timed_run(sim, rounds: int, b: int, cut: int = 2) -> float:
@@ -157,8 +175,7 @@ def _timed_run(sim, rounds: int, b: int, cut: int = 2) -> float:
         return np.full(s.n, b), np.full(s.n, cut)
 
     t0 = time.time()
-    sim.run(policy, rounds=rounds, eval_every=10_000,
-            reconfigure_every=10_000)
+    sim.run(policy, rounds=rounds, eval_every=10_000, reconfigure_every=10_000)
     return (time.time() - t0) / rounds
 
 
@@ -191,17 +208,23 @@ def main():
     ap.add_argument("--clients", type=int, nargs="*", default=[16])
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--repeats", type=int, default=5)
-    ap.add_argument("--cnn", action="store_true",
-                    help="also run the (CPU-conv-bound) vgg9 configuration")
-    ap.add_argument("--quick", action="store_true",
-                    help="CI tier-1 mode: small clients/rounds, lm-tiny "
-                         "only — tracks the trajectory, proves nothing "
-                         "about absolute speed")
-    ap.add_argument("--check-regression", action="store_true",
-                    dest="check_regression",
-                    help="fail (exit 1) when any engine column regresses "
-                         f">{GATE_FACTOR}x vs the last committed row for "
-                         "the same (config, n_clients)")
+    ap.add_argument(
+        "--cnn", action="store_true",
+        help="also run the (CPU-conv-bound) vgg9 configuration"
+    )
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="CI tier-1 mode: small clients/rounds, lm-tiny "
+             "only — tracks the trajectory, proves nothing "
+             "about absolute speed"
+    )
+    ap.add_argument(
+        "--check-regression", action="store_true",
+        dest="check_regression",
+        help="fail (exit 1) when any engine column regresses "
+             f">{GATE_FACTOR}x vs the last committed row for "
+             "the same (config, n_clients)"
+    )
     ap.add_argument("--out", default=os.path.join(OUT_DIR, "sim_speed.csv"))
     args = ap.parse_args()
     if args.quick:
@@ -210,7 +233,7 @@ def main():
         args.clients, args.rounds, args.repeats = [4], 5, 5
 
     prev = last_committed_rows(args.out)
-    sha, ts = git_sha(), now_iso()
+    sha, ts, rid = git_sha(), now_iso(), runner_id()
     rows = []
     for n in args.clients:
         configs = [("lm-tiny", make_lm_tiny)]
@@ -218,32 +241,33 @@ def main():
             configs.append(("lm-small", make_lm_sim))
         if args.cnn and not args.quick:
             def make_cnn(n_clients, engine):
-                sim, _ = make_sim(n_clients=n_clients, iid=True, seed=0,
-                                  engine=engine)
+                sim, _ = make_sim(n_clients=n_clients, iid=True, seed=0, engine=engine)
                 return sim, 8
             configs.append(("cnn", lambda **kw: make_cnn(**kw)))
         for name, factory in configs:
             ms = time_engines(factory, n, args.rounds, args.repeats)
             vec_speedup = ms["legacy"] / ms["vectorized"]
             scan_speedup = ms["vectorized"] / ms["scan"]
-            rows.append([name, n, round(ms["legacy"], 1),
-                         round(ms["vectorized"], 1), round(ms["scan"], 1),
-                         round(vec_speedup, 2), round(scan_speedup, 2),
-                         sha, ts])
-            print(f"{name:8s} N={n:3d}  loop {ms['legacy']:8.1f} ms/round  "
-                  f"vectorized {ms['vectorized']:8.1f} ms/round  "
-                  f"scan {ms['scan']:8.1f} ms/round  "
-                  f"vec {vec_speedup:5.2f}x  scan +{scan_speedup:5.2f}x",
-                  flush=True)
+            rows.append([
+                name, n, round(ms["legacy"], 1),
+                round(ms["vectorized"], 1), round(ms["scan"], 1),
+                round(vec_speedup, 2), round(scan_speedup, 2),
+                sha, ts, rid
+            ])
+            print(
+                f"{name:8s} N={n:3d}  loop {ms['legacy']:8.1f} ms/round  "
+                f"vectorized {ms['vectorized']:8.1f} ms/round  "
+                f"scan {ms['scan']:8.1f} ms/round  "
+                f"vec {vec_speedup:5.2f}x  scan +{scan_speedup:5.2f}x",
+                flush=True
+            )
     append_csv(args.out, HEADER, rows)
     if args.check_regression:
         failures, warnings = check_regression(prev, rows)
         if warnings:
-            print("perf gate warnings:\n  " + "\n  ".join(warnings),
-                  file=sys.stderr)
+            print("perf gate warnings:\n  " + "\n  ".join(warnings), file=sys.stderr)
         if failures:
-            print("PERF REGRESSION:\n  " + "\n  ".join(failures),
-                  file=sys.stderr)
+            print("PERF REGRESSION:\n  " + "\n  ".join(failures), file=sys.stderr)
             sys.exit(1)
         print(f"perf gate OK ({len(rows)} row(s) vs committed trajectory)")
 

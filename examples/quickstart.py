@@ -1,49 +1,62 @@
-"""Quickstart: the HASFL controller + one split-training round, end to end.
+"""Quickstart: declare an experiment, run it, then run a grid.
+
+Everything goes through `repro.api`: an `ExperimentSpec` describes the
+cell (model, data partition, cohort, SFL config, policy, scenario,
+seed), a `Session` assembles and runs it, and `Session.run_grid`
+executes whole policy x scenario grids — compatible cells batch into
+one vmapped mega-run over the scan engine (DESIGN.md §10).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.config import get_config, SFLConfig
-from repro.core.profiles import model_profile
-from repro.core.latency import sample_devices
+from repro.api import ExperimentSpec, Session
+from repro.config import SFLConfig, get_config
 from repro.core.bcd import HASFLOptimizer
-from repro.core.sfl import SFLEdgeSimulator
-from repro.core import baselines
-from repro.models import build_model
-from repro.data import make_cifar_like, partition_noniid_shards, ClientSampler
+from repro.core.profiles import model_profile
 
-# 1. A heterogeneous edge cluster (paper Table I) ---------------------------
-rng = np.random.default_rng(0)
-sfl = SFLConfig(n_devices=6, agg_interval=5, lr=0.05)
-devices = sample_devices(6, rng)
+# 1. Declare the experiment ------------------------------------------------
+spec = ExperimentSpec(
+    arch="vgg9-cifar-small",
+    n_clients=6,
+    partition="noniid-shards",
+    n_train=600,
+    n_test=150,
+    policy="hasfl",
+    estimate=False,           # keep the quickstart fast; True re-estimates
+    rounds=30,                # G²/σ² online at every reconfiguration
+    eval_every=10,
+    sfl=SFLConfig(agg_interval=5, lr=0.05),
+)
+print("spec (JSON round-trippable, commit it next to your CSVs):")
+print(spec.to_json())
+assert ExperimentSpec.from_json(spec.to_json()) == spec
 
-# 2. The paper's VGG-16 profile + the joint BS/MS optimizer -----------------
-profile = model_profile(get_config("vgg16-cifar"))
-opt = HASFLOptimizer(profile, devices, sfl)
-decision = opt.solve()
-print("HASFL decision:")
+# 2. Peek at the paper's full-scale decision first -------------------------
+# (the controller itself; Session wires the same thing internally)
+sess = Session(spec)
+full = HASFLOptimizer(model_profile(get_config("vgg16-cifar")),
+                      sess.devices, spec.resolved_sfl)
+decision = full.solve()
+print("HASFL decision on the full VGG-16 profile:")
 print("  batch sizes:", decision.b)
 print("  cut layers :", decision.cuts)
 print(f"  est. rounds to eps: {decision.rounds:.0f}; "
       f"T_split={decision.t_split:.3f}s T_agg={decision.t_agg:.3f}s")
 
-# 3. Split-federated training on a CPU-sized model --------------------------
-cfg = get_config("vgg9-cifar-small")
-model = build_model(cfg)
-(xtr, ytr), (xte, yte) = make_cifar_like(10, 600, 150, 32, seed=1)
-shards = partition_noniid_shards(ytr, sfl.n_devices, rng)
-sampler = ClientSampler({"images": xtr, "labels": ytr}, shards, rng)
-sim_profile = model_profile(cfg)
-sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
-                       devices, sfl, sim_profile, seed=0)
-sim_opt = HASFLOptimizer(sim_profile, devices, sfl)
-
-
-def policy(sim_, prng):
-    return baselines.policy("hasfl", sim_opt, prng)
-
-
-res = sim.run(policy, rounds=30, eval_every=10, verbose=True)
+# 3. Run the cell ----------------------------------------------------------
+res = sess.run(verbose=True)
 print(f"final accuracy {res.test_acc[-1]:.3f} after "
       f"{res.clock[-1]:.2f} simulated seconds")
+
+# 4. Run a policy x scenario grid ------------------------------------------
+# Cells that share model/data/seed/config group into ONE vmapped mega-run;
+# results are bitwise-identical to running each spec alone.
+grid = [
+    spec.replace(policy=policy, scenario=preset, rounds=12, eval_every=4,
+                 reconfigure_every=4)
+    for policy in ("hasfl", "fixed")
+    for preset in ("stable", "flaky-uplink")
+]
+results = Session.run_grid(grid)
+for cell, r in zip(grid, results):
+    print(f"{cell.scenario:14s} {cell.policy:6s} "
+          f"clock={r.clock[-1]:8.2f}s best_loss={min(r.test_loss):.4f}")

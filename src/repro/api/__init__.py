@@ -1,0 +1,31 @@
+"""`repro.api` — the declarative experiment layer (DESIGN.md §10).
+
+`ExperimentSpec` (frozen, JSON round-trippable) describes one
+simulation cell; `Session` assembles and runs it; `Session.run_grid`
+executes whole policy x scenario grids, batching compatible cells into
+vmapped mega-runs over the scan engine.
+"""
+
+from repro.api.grid import group_cells, run_group
+from repro.api.policies import list_policies, make_policy, register_policy
+from repro.api.session import Session, run_grid
+from repro.api.spec import (
+    SPEC_VERSION,
+    ExperimentSpec,
+    load_specs,
+    save_specs,
+)
+
+__all__ = [
+    "SPEC_VERSION",
+    "ExperimentSpec",
+    "Session",
+    "group_cells",
+    "list_policies",
+    "load_specs",
+    "make_policy",
+    "register_policy",
+    "run_grid",
+    "run_group",
+    "save_specs",
+]

@@ -1,0 +1,199 @@
+"""The vmapped policy x scenario grid runner (DESIGN.md §10).
+
+`run_group` executes a list of *compatible* sessions — same
+`ExperimentSpec.grid_key()`: same model/data/seed, same `SFLConfig`,
+same round segmentation; only the policy and the scenario preset differ
+— as one mega-run: every cell's [N, ...]-stacked client units gain a
+leading grid axis, and each training segment dispatches once as a
+jitted ``vmap`` of the scan engine's donated-carry segment body instead
+of once per cell.
+
+Bitwise contract (tested in tests/test_api.py and gated by the
+scenario-sweep ``--bench-grid`` mode): each cell's decision stream,
+simulated clock, eval losses/accuracies, and final parameters are
+bit-for-bit identical to running that cell alone through
+`Session.run()`.  Three ingredients make this hold:
+
+- per-slice vmap purity: the vmapped segment body reduces over exactly
+  the same axes in the same order as the single-cell scan (verified
+  empirically; XLA keeps per-slice reduction order when batching adds a
+  leading axis);
+- host-side parity: clocks, policy decisions, scenario traces, and the
+  RNG index streams are advanced by the *same* per-cell host code the
+  sequential scheduler uses (`SFLEdgeSimulator._advance_clock`,
+  `DeviceClientStore.segment_indices`, the controller objects);
+- bucket sub-grouping: a cell's gather plan is padded to its OWN
+  ``pow2_bucket(b_max)`` — padding wider (e.g. to a grid-global
+  maximum) regroups the batch-axis gradient reduction and is NOT
+  bitwise-stable — so within a segment, cells whose current b_max falls
+  in different buckets go out in separate vmapped dispatches (the grid
+  is sliced, sub-stacked, and re-stitched; with one bucket the whole
+  grid ships as a single donated carry and nothing is copied).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import split as SP
+from repro.core.sfl import SimResult, pow2_bucket
+
+
+def group_cells(specs) -> list:
+    """Partition spec indices into grid-compatible groups, order-stable.
+
+    Returns a list of index lists; specs with ``grid_key() is None``
+    (non-scan engines) stay singletons and fall back to sequential
+    `Session.run()`.
+    """
+    order, groups = [], {}
+    for i, spec in enumerate(specs):
+        key = spec.grid_key()
+        if key is None:
+            order.append([i])
+            continue
+        if key not in groups:
+            groups[key] = []
+            order.append(groups[key])
+        groups[key].append(i)
+    return order
+
+
+def _stack_cells(states) -> list:
+    """Per-cell unit lists ([N, ...] leaves) -> [G, N, ...]-stacked units."""
+    n_units = len(states[0])
+    return [
+        jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[state[u] for state in states]
+        )
+        for u in range(n_units)
+    ]
+
+
+def _cell_state(grid, g: int) -> list:
+    """Slice cell ``g``'s [N, ...] unit list out of the stacked grid."""
+    return [jax.tree_util.tree_map(lambda a: a[g], u) for u in grid]
+
+
+def run_group(sessions, *, verbose: bool = False) -> list:
+    """Run grid-compatible sessions as one vmapped mega-run.
+
+    The walk is the scan engine's segment scheduler
+    (`SFLEdgeSimulator._run_scan`) lifted over a cell axis: one shared
+    clock loop chops the round range at eval/reconfiguration
+    boundaries, each segment dispatches per b_max bucket, and all
+    per-cell host state (clocks, controllers, scenarios, RNG streams,
+    metric records) advances through the cells' own simulator objects
+    so single-spec semantics are preserved exactly.
+    """
+    sims = [s.sim for s in sessions]
+    sim0 = sims[0]
+    spec0 = sessions[0].spec
+    n_cells = len(sessions)
+    rounds = spec0.rounds
+    eval_every = spec0.eval_every
+    reconf = spec0.resolved_reconfigure_every
+    n_units_total = len(sim0.units)
+
+    # one executable per (segment length, b_pad, sub-group size); sim0's
+    # bound segment body is shared by every cell (identical model + SFL
+    # config is what grid_key guarantees)
+    grid_fn = jax.jit(
+        jax.vmap(sim0._scan_segment, in_axes=(0, None, 0, 0, 0, None)),
+        donate_argnums=(0,),
+    )
+    arrays = sim0.store.arrays
+
+    res = [SimResult() for _ in range(n_cells)]
+    clocks = [0.0] * n_cells
+    decisions = []
+    for g, sess in enumerate(sessions):
+        sims[g]._scenario_tick(sess.scenario, 0)
+        b, cuts = sess.policy(sims[g], sims[g].rng)
+        sims[g]._record_policy(res[g], b, cuts)
+        decisions.append((np.asarray(b), np.asarray(cuts)))
+
+    grid = _stack_cells([sim._stacked for sim in sims])
+
+    def plans(members, seg, b_pad):
+        """Stack the member cells' per-segment gather plans/masks."""
+        idx, rmask, masks = [], [], []
+        for g in members:
+            b, cuts = decisions[g]
+            l_c_units = int(np.max(sims[g]._unit_cuts(cuts)))
+            masks.append(
+                SP.client_unit_mask(sim0.cfg, n_units_total, l_c_units)
+            )
+            idx.append(sims[g].store.segment_indices(seg, b, b_pad))
+            rmask.append(sims[g].store.row_mask(b, b_pad))
+        return (
+            jnp.asarray(np.stack(idx)),
+            jnp.asarray(np.stack(rmask)),
+            jnp.asarray(np.stack(masks)),
+        )
+
+    t = 0
+    while t < rounds:
+        nxt = min(
+            (t // eval_every + 1) * eval_every,
+            (t // reconf + 1) * reconf,
+            rounds,
+        )
+        seg = nxt - t
+        t0 = jnp.asarray(t, jnp.int32)
+        buckets = {}
+        for g, (b, _) in enumerate(decisions):
+            buckets.setdefault(pow2_bucket(int(np.max(b))), []).append(g)
+
+        seg_losses = [None] * n_cells
+        if len(buckets) == 1:
+            # uniform bucket: the whole grid is one donated carry
+            b_pad, members = next(iter(buckets.items()))
+            idx, rmask, masks = plans(members, seg, b_pad)
+            grid, losses = grid_fn(grid, t0, idx, rmask, masks, arrays)
+            losses = np.asarray(losses)
+            for g in members:
+                seg_losses[g] = losses[g]
+        else:
+            cells = [_cell_state(grid, g) for g in range(n_cells)]
+            new_cells = [None] * n_cells
+            for b_pad, members in sorted(buckets.items()):
+                idx, rmask, masks = plans(members, seg, b_pad)
+                sub = _stack_cells([cells[g] for g in members])
+                sub, losses = grid_fn(sub, t0, idx, rmask, masks, arrays)
+                losses = np.asarray(losses)
+                for j, g in enumerate(members):
+                    new_cells[g] = _cell_state(sub, j)
+                    seg_losses[g] = losses[j]
+            grid = _stack_cells(new_cells)
+
+        for g, sess in enumerate(sessions):
+            b, cuts = decisions[g]
+            clocks[g] = sims[g]._advance_clock(
+                clocks[g], t, nxt, b, cuts, sess.scenario
+            )
+        t = nxt
+
+        at_reconf = t % reconf == 0 and t < rounds
+        at_eval = t % eval_every == 0 or t == rounds
+        if at_reconf or at_eval:
+            # controllers (online G²/σ² estimation) and eval both read
+            # the live per-cell state through the cell's own simulator
+            for g in range(n_cells):
+                sims[g]._stacked = _cell_state(grid, g)
+        if at_reconf:
+            for g, sess in enumerate(sessions):
+                b, cuts = sess.policy(sims[g], sims[g].rng)
+                sims[g]._record_policy(res[g], b, cuts)
+                decisions[g] = (np.asarray(b), np.asarray(cuts))
+        if at_eval:
+            for g in range(n_cells):
+                sims[g]._record_metrics(
+                    res[g], t, clocks[g], seg_losses[g][-1], verbose
+                )
+
+    for g in range(n_cells):
+        sims[g]._stacked = _cell_state(grid, g)
+    return res

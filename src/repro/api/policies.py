@@ -1,0 +1,84 @@
+"""The policy registry: one place every driver builds controllers from.
+
+Absorbs the `repro.core.baselines.policy` name dispatch: each Section-VII
+benchmark policy (and the fixed classics) is registered as a factory
+``(profile, sfl, *, estimate, seed, **kw) -> policy_fn`` returning the
+``policy_fn(sim, rng) -> (b, cuts)`` callable `SFLEdgeSimulator.run`
+invokes at every reconfiguration boundary.  The returned controllers are
+the scenario-aware ones (`repro.scenarios.controller`): they re-inject
+the live device pool each boundary, so the same policy object is correct
+under static pools and time-varying scenarios alike.
+
+Registering a custom policy:
+
+    from repro.api import register_policy
+
+    def my_factory(profile, sfl, *, estimate=True, seed=0, **kw):
+        def policy(sim, rng):
+            n = len(sim.devices)
+            return np.full(n, 8), np.full(n, 2)
+        return policy
+
+    register_policy("my-policy", my_factory)
+
+Completeness against `baselines.POLICY_NAMES` is asserted in tier-1
+(tests/test_api.py), so a new branch in `baselines.policy` without a
+registry entry fails CI.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core import baselines
+from repro.scenarios.controller import BaselineController, HASFLController
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_policy(name: str, factory: Callable) -> None:
+    """Register ``factory(profile, sfl, *, estimate, seed, **kw)``."""
+    _REGISTRY[name.lower()] = factory
+
+
+def list_policies() -> list:
+    return sorted(_REGISTRY)
+
+
+def make_policy(
+    name: str,
+    profile,
+    sfl,
+    *,
+    estimate: bool = True,
+    seed: int = 0,
+    **kw,
+):
+    """Build the named policy's controller callable."""
+    key = name.lower()
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown policy {name!r}; known: {list_policies()}"
+        )
+    return _REGISTRY[key](profile, sfl, estimate=estimate, seed=seed, **kw)
+
+
+def _hasfl_factory(profile, sfl, *, estimate=True, seed=0, **kw):
+    return HASFLController(profile, sfl, estimate=estimate, seed=seed, **kw)
+
+
+def _baseline_factory(name: str) -> Callable:
+    def factory(profile, sfl, *, estimate=True, seed=0, **kw):
+        # non-adaptive-constant policies ignore estimate/seed: their
+        # randomness comes from the simulator's policy RNG stream
+        return BaselineController(name, profile, sfl)
+
+    return factory
+
+
+for _name in baselines.POLICY_NAMES:
+    if _name == "hasfl":
+        register_policy(_name, _hasfl_factory)
+    else:
+        register_policy(_name, _baseline_factory(_name))
+del _name

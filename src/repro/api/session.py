@@ -1,0 +1,220 @@
+"""`Session`: one place that assembles and runs an `ExperimentSpec`.
+
+Every driver used to repeat the same 8-step wiring — config, model,
+data, partition, sampler, `SFLConfig`, layer profile, device pool,
+simulator, optimizer/policy — with small copy-paste drifts between
+`benchmarks/common.py`, `repro.launch.train`, the examples, and the
+scenario sweep.  A `Session` owns that assembly: construct it from a
+spec, call `run()`, or hand a whole grid of specs to
+`Session.run_grid` and compatible cells execute as vmapped mega-runs
+(`repro.api.grid`).
+
+Sessions are single-shot: the simulator they wrap is stateful (trained
+parameters, advanced RNG streams), so a second `run()` would not be the
+run the spec describes.  Build a fresh `Session` (cheap) per run.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.api import policies as policy_registry
+from repro.api.grid import group_cells, run_group
+from repro.api.spec import ExperimentSpec
+from repro.config import get_config
+from repro.core.bcd import HASFLOptimizer
+from repro.core.latency import sample_devices
+from repro.core.profiles import model_profile
+from repro.core.sfl import SFLEdgeSimulator, SimResult
+from repro.data import (
+    ClientSampler,
+    make_cifar_like,
+    make_lm_data,
+    partition_iid,
+    partition_noniid_shards,
+)
+from repro.models import build_model
+
+
+class Session:
+    """One runnable simulation cell, assembled from an `ExperimentSpec`.
+
+    Construction replicates the historical `benchmarks/common.make_sim`
+    wiring exactly — one host RNG seeded from ``spec.seed`` feeds the
+    partition, the sampler, and the device pool in that order — so specs
+    reproduce the results every pre-API driver produced.
+    """
+
+    def __init__(self, spec: ExperimentSpec):
+        spec = spec.validated()
+        self.spec = spec
+        self.cfg = get_config(spec.arch)
+        if spec.policy.lower() not in policy_registry.list_policies():
+            raise KeyError(
+                f"unknown policy {spec.policy!r}; "
+                f"known: {policy_registry.list_policies()}"
+            )
+        if spec.scenario is not None:
+            from repro.scenarios import list_presets
+
+            if spec.scenario not in list_presets():
+                raise KeyError(
+                    f"unknown scenario preset {spec.scenario!r}; "
+                    f"known: {list_presets()}"
+                )
+
+        self.model = build_model(self.cfg)
+        rng = np.random.default_rng(spec.seed)
+        train, test, shard_labels = self._build_data(spec)
+        if spec.partition == "iid":
+            shards = partition_iid(spec.n_train, spec.n_clients, rng)
+        else:
+            shards = partition_noniid_shards(shard_labels, spec.n_clients, rng)
+        self.sampler = ClientSampler(train, shards, rng)
+        self.sfl = spec.resolved_sfl
+        # token archs: the latency/controller profile must price the
+        # sequence length the cell actually trains on (CNNs ignore it)
+        self.profile = model_profile(self.cfg, seq_len=spec.seq_len)
+        self.devices = sample_devices(spec.n_clients, rng)
+        self.sim = SFLEdgeSimulator(
+            self.model,
+            self.sampler,
+            test,
+            self.devices,
+            self.sfl,
+            self.profile,
+            seed=spec.seed,
+            engine=spec.resolved_engine,
+        )
+        if spec.scenario is not None:
+            from repro.scenarios import make_scenario
+
+            self.scenario = make_scenario(
+                spec.scenario, self.devices, seed=spec.scenario_seed
+            )
+        else:
+            self.scenario = None
+        self.policy = policy_registry.make_policy(
+            spec.policy,
+            self.profile,
+            self.sfl,
+            estimate=spec.estimate,
+            seed=spec.seed,
+        )
+        self._opt: Optional[HASFLOptimizer] = None
+        self._ran = False
+
+    def _build_data(self, spec: ExperimentSpec):
+        """(train arrays, test batch, labels for non-IID sharding)."""
+        if self.cfg.is_cnn:
+            (xtr, ytr), (xte, yte) = make_cifar_like(
+                self.cfg.n_classes,
+                spec.n_train,
+                spec.n_test,
+                self.cfg.image_size,
+                seed=spec.seed,
+            )
+            train = {"images": xtr, "labels": ytr}
+            test = {"images": xte, "labels": yte}
+            return train, test, ytr
+        if spec.partition != "iid":
+            raise ValueError(
+                "token architectures use synthetic LM data with no class "
+                "labels; only partition='iid' is supported"
+            )
+        tokens, labels = make_lm_data(
+            self.cfg.vocab_size,
+            spec.n_train + spec.n_test,
+            spec.seq_len,
+            seed=spec.seed,
+        )
+        train = {
+            "tokens": tokens[: spec.n_train],
+            "labels": labels[: spec.n_train],
+        }
+        test = {
+            "tokens": tokens[spec.n_train :],
+            "labels": labels[spec.n_train :],
+        }
+        return train, test, None
+
+    # -- conveniences -------------------------------------------------------
+
+    @property
+    def engine(self) -> str:
+        return self.sim.engine
+
+    @property
+    def optimizer(self) -> HASFLOptimizer:
+        """The cell's joint BS/MS optimizer (built on first use).
+
+        Figure drivers that run `repro.core.baselines.policy` directly
+        use this instead of wiring their own `HASFLOptimizer`.
+        """
+        if self._opt is None:
+            self._opt = HASFLOptimizer(self.profile, self.devices, self.sfl)
+        return self._opt
+
+    def grid_key(self):
+        return self.spec.grid_key()
+
+    def _consume(self) -> None:
+        if self._ran:
+            raise RuntimeError(
+                "Session already ran; sessions are single-shot — build a "
+                "fresh Session from the spec to rerun"
+            )
+        self._ran = True
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, *, verbose: bool = False) -> SimResult:
+        """Run this cell alone (any engine)."""
+        self._consume()
+        return self.sim.run(
+            self.policy,
+            rounds=self.spec.rounds,
+            eval_every=self.spec.eval_every,
+            reconfigure_every=self.spec.reconfigure_every,
+            verbose=verbose,
+            scenario=self.scenario,
+        )
+
+    @classmethod
+    def run_grid(
+        cls,
+        specs: Sequence[Union[ExperimentSpec, "Session"]],
+        *,
+        verbose: bool = False,
+    ) -> List[SimResult]:
+        """Run a grid of cells, batching compatible ones (DESIGN.md §10).
+
+        Cells sharing `ExperimentSpec.grid_key()` — same model, data,
+        seed, `SFLConfig`, and round segmentation; policy and scenario
+        free — are stacked on a leading grid axis and executed as one
+        vmapped mega-run over the scan engine's donated carry.
+        Incompatible or non-scan cells fall back to sequential
+        `run()`.  Results come back in input order and are bitwise
+        identical to running each spec alone.
+        """
+        sessions = [s if isinstance(s, Session) else cls(s) for s in specs]
+        results: List[Optional[SimResult]] = [None] * len(sessions)
+        for idxs in group_cells([sessions[i].spec for i in range(len(sessions))]):
+            members = [sessions[i] for i in idxs]
+            if len(members) == 1:
+                results[idxs[0]] = members[0].run(verbose=verbose)
+                continue
+            for sess in members:
+                sess._consume()
+            for i, r in zip(idxs, run_group(members, verbose=verbose)):
+                results[i] = r
+        return results
+
+
+def run_grid(
+    specs: Sequence[Union[ExperimentSpec, Session]], *, verbose: bool = False
+) -> List[SimResult]:
+    """Module-level alias for `Session.run_grid`."""
+    return Session.run_grid(specs, verbose=verbose)

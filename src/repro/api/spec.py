@@ -1,0 +1,190 @@
+"""Declarative experiment descriptions (DESIGN.md §10).
+
+An `ExperimentSpec` is the *complete* recipe for one simulation cell —
+model architecture, data partition, cohort size, `SFLConfig`, scenario
+preset, policy name, seed, and run schedule.  It is frozen (hashable,
+usable as a grouping key) and round-trips losslessly through JSON, so
+the exact spec that produced a CSV can be committed next to it in
+``experiments/`` and replayed bit-for-bit.
+
+The paper's headline results are grids of these cells — policies x
+heterogeneity scenarios x seeds (Figs. 5-8) — which is why the runner
+API (`repro.api.session`) takes *lists* of specs as its primary input.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.config import SFLConfig
+
+# Bumped when fields change incompatibly; `from_dict` accepts any dict
+# whose version matches and rejects unknown keys, so stale spec files
+# fail loudly instead of silently dropping knobs.
+SPEC_VERSION = 1
+
+PARTITIONS = ("iid", "noniid-shards")
+ENGINES = (None, "legacy", "vectorized", "scan")
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """One simulation cell, declaratively.
+
+    ``sfl.n_devices`` is always overridden by ``n_clients`` at build
+    time (one source of truth for the cohort size); every other
+    `SFLConfig` knob (agg interval, lr, clip, server resources, the
+    Assumption-2 priors) is taken verbatim.
+
+    ``engine=None`` auto-picks the round-scan engine — the fastest
+    equivalent engine, and the only one `Session.run_grid` can batch.
+    ``estimate`` enables the online G²/σ² re-estimation inside the
+    HASFL controller (ignored by the non-adaptive policies).
+
+    ``seq_len`` only applies to non-CNN (token) architectures, which
+    train on synthetic LM data and support ``partition="iid"`` only.
+    """
+
+    arch: str = "vgg9-cifar-small"
+    n_clients: int = 8
+    partition: str = "noniid-shards"
+    n_train: int = 1200
+    n_test: int = 300
+    seq_len: int = 32
+    seed: int = 0
+    policy: str = "hasfl"
+    estimate: bool = True
+    scenario: Optional[str] = None
+    scenario_seed: int = 7
+    rounds: int = 60
+    eval_every: int = 10
+    reconfigure_every: Optional[int] = None
+    engine: Optional[str] = None
+    sfl: SFLConfig = SFLConfig(lr=0.05)
+
+    # -- validation ---------------------------------------------------------
+
+    def validated(self) -> "ExperimentSpec":
+        """Raise ``ValueError`` on structurally invalid field values.
+
+        Name resolution that needs registries (arch, policy, scenario
+        preset) happens at `Session` build time, where the registries
+        are already imported; this check is dependency-free so specs
+        can be validated wherever they are authored.
+        """
+        if self.partition not in PARTITIONS:
+            raise ValueError(
+                f"unknown partition {self.partition!r}; known: {PARTITIONS}"
+            )
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}; known: {ENGINES}"
+            )
+        if self.n_clients < 1:
+            raise ValueError("n_clients must be >= 1")
+        if self.rounds < 1:
+            raise ValueError("rounds must be >= 1")
+        if self.eval_every < 1:
+            raise ValueError("eval_every must be >= 1")
+        if self.reconfigure_every is not None and self.reconfigure_every < 1:
+            raise ValueError("reconfigure_every must be >= 1 or None")
+        if not isinstance(self.sfl, SFLConfig):
+            raise ValueError("sfl must be an SFLConfig")
+        return self
+
+    # -- derived views ------------------------------------------------------
+
+    @property
+    def resolved_engine(self) -> str:
+        return self.engine or "scan"
+
+    @property
+    def resolved_sfl(self) -> SFLConfig:
+        """The run's `SFLConfig` with ``n_devices`` pinned to the cohort."""
+        return dataclasses.replace(self.sfl, n_devices=self.n_clients)
+
+    @property
+    def resolved_reconfigure_every(self) -> int:
+        return self.reconfigure_every or self.sfl.agg_interval
+
+    def replace(self, **overrides) -> "ExperimentSpec":
+        return dataclasses.replace(self, **overrides)
+
+    def grid_key(self):
+        """Hashable compatibility key for `Session.run_grid` grouping.
+
+        Cells sharing this key execute the same jitted program on the
+        same data and round segmentation — only policy decisions and
+        scenario trace states differ — so they can be stacked on a
+        leading grid axis and run as one vmapped mega-run.  ``None``
+        means the cell cannot be grouped (non-scan engine).
+        """
+        if self.resolved_engine != "scan":
+            return None
+        return (
+            self.arch,
+            self.n_clients,
+            self.partition,
+            self.n_train,
+            self.n_test,
+            self.seq_len,
+            self.seed,
+            self.resolved_sfl,
+            self.rounds,
+            self.eval_every,
+            self.resolved_reconfigure_every,
+        )
+
+    # -- JSON round-trip ----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["spec_version"] = SPEC_VERSION
+        return d
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        d = dict(d)
+        version = d.pop("spec_version", SPEC_VERSION)
+        if version != SPEC_VERSION:
+            raise ValueError(
+                f"spec version {version} != supported {SPEC_VERSION}"
+            )
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown spec fields: {sorted(unknown)}")
+        if isinstance(d.get("sfl"), dict):
+            d["sfl"] = SFLConfig(**d["sfl"])
+        return cls(**d).validated()
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def save_specs(path: str, specs) -> None:
+    """Write a JSON array of specs (one sweep's grid) next to its CSV."""
+    with open(path, "w") as f:
+        json.dump([s.to_dict() for s in specs], f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_specs(path: str) -> list:
+    with open(path) as f:
+        return [ExperimentSpec.from_dict(d) for d in json.load(f)]

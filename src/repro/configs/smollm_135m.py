@@ -17,3 +17,22 @@ CONFIG = register(ModelConfig(
     tie_embeddings=True,
     source="hf:HuggingFaceTB/SmolLM-135M",
 ))
+
+# CPU-scale member of the same family, registered so declarative
+# `repro.api.ExperimentSpec`s can name a token-arch cell (the
+# dispatch-bound regime the grid runner and sim_speed's lm-tiny
+# configuration target) — `reduced()` transforms can't be expressed in
+# a JSON spec, registry entries can.
+TINY = register(ModelConfig(
+    arch_id="smollm-tiny",
+    family=DENSE,
+    n_layers=2,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=1,
+    d_ff=256,
+    vocab_size=256,
+    head_dim=32,
+    tie_embeddings=True,
+    source="reduced smollm-135m (CPU-scale; not a released model)",
+))

@@ -28,6 +28,21 @@ from repro.core.ms_opt import MSProblem
 # initializer; the cut sits at the first quarter like the BCD's start)
 FIXED_B = 16
 
+# Canonical policy names `policy()` dispatches on — the single source the
+# `repro.api.policies` registry is built from (its completeness test
+# asserts registry == this list, so adding a branch to `policy()` without
+# registering it is caught in tier-1).
+POLICY_NAMES = (
+    "hasfl",
+    "rbs+hams",
+    "habs+rms",
+    "rbs+rms",
+    "rbs+rhams",
+    "fixed",
+    "fixed-bs",
+    "fixed-ms",
+)
+
 
 def fixed_cut(n_layers: int) -> int:
     return max(1, n_layers // 4)
@@ -53,26 +68,25 @@ def rhams(opt: HASFLOptimizer, b: np.ndarray) -> np.ndarray:
         down = max(dev.down_bw, BW_FLOOR)
         t_client = b[i] * (p.rho + p.bwd) / f
         t_comm = b[i] * (p.psi / up + p.chi / down)
-        t_server = b[i] * ((p.rho[-1] - p.rho) + (p.bwd[-1] - p.bwd)) \
+        t_server = (
+            b[i] * ((p.rho[-1] - p.rho) + (p.bwd[-1] - p.bwd))
             / opt.sfl.server_flops
+        )
         cuts[i] = int(np.argmin(t_client + t_comm + t_server)) + 1
     return cuts
 
 
-def habs(opt: HASFLOptimizer, cuts: np.ndarray,
-         b0=None) -> np.ndarray:
+def habs(opt: HASFLOptimizer, cuts: np.ndarray, b0=None) -> np.ndarray:
     """Heterogeneity-aware BS only (our Proposition 1, cuts fixed)."""
     from repro.core.bs_opt import solve_bs
-    b_ref = np.asarray(b0 if b0 is not None
-                       else np.full(len(opt.devices), 16), float)
+    b_ref = np.asarray(b0 if b0 is not None else np.full(len(opt.devices), 16), float)
     prob = opt._bs_problem(np.asarray(cuts, int), b_ref)
     return solve_bs(prob, b0=b_ref)
 
 
 def hams(opt: HASFLOptimizer, b: np.ndarray) -> np.ndarray:
     """Heterogeneity-aware MS only (our Dinkelbach, b fixed)."""
-    ms = MSProblem(opt.profile, opt.devices, opt.sfl, opt.conv,
-                   np.asarray(b, float))
+    ms = MSProblem(opt.profile, opt.devices, opt.sfl, opt.conv, np.asarray(b, float))
     return ms.solve()
 
 

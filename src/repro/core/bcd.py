@@ -32,8 +32,10 @@ class HASFLDecision:
 class HASFLOptimizer:
     """Joint heterogeneity-aware BS + MS controller (the paper's core)."""
 
-    def __init__(self, profile: LayerProfile, devices: Sequence[DeviceProfile],
-                 sfl: SFLConfig, conv: Optional[ConvergenceModel] = None):
+    def __init__(
+        self, profile: LayerProfile, devices: Sequence[DeviceProfile],
+        sfl: SFLConfig, conv: Optional[ConvergenceModel] = None
+    ):
         self.profile = profile
         self.sfl = sfl
         self.conv = conv or ConvergenceModel(profile, sfl)
@@ -57,8 +59,7 @@ class HASFLOptimizer:
         j = np.asarray(cuts, int) - 1
         l_c = int(np.max(cuts))
         a = self.conv.denominator(np.full(n, 1e9), l_c)   # eps - drift only
-        b_const = (self.conv.beta * sfl.lr
-                   * p.sigma_sq_total() / n ** 2)
+        b_const = (self.conv.beta * sfl.lr * p.sigma_sq_total() / n ** 2)
         c = ((p.rho[-1] - p.rho[j]) + (p.bwd[-1] - p.bwd[j])) / sfl.server_flops
         rl = self.lat.round_latency(b_ref, cuts)
         t3 = float(np.max(rl.t_f + rl.t_a_up))
@@ -75,27 +76,33 @@ class HASFLOptimizer:
         mem = np.array([dv.memory for dv in self.devices])
         psi_cum, chi_cum = np.cumsum(p.psi), np.cumsum(p.chi)
         opt_bits = p.delta[j] * (1 + sfl.optimizer_state_mult)
-        kap_mem = (mem - opt_bits) / np.maximum(
-            psi_cum[j] + chi_cum[j], 1e-30)
+        kap_mem = (mem - opt_bits) / np.maximum(psi_cum[j] + chi_cum[j], 1e-30)
         kap_t3 = t3 / np.maximum(p.rho[j] / f + p.psi[j] / r_up, 1e-30)
         kap_t4 = t4 / np.maximum(p.chi[j] / r_down + p.bwd[j] / f, 1e-30)
-        kappa = np.minimum(np.minimum(kap_mem, kap_t3),
-                           np.minimum(kap_t4, float(sfl.max_batch)))
-        return BSProblem(a=a, b_const=b_const, c=c, d=d, kappa=kappa,
-                         theta_gap=self.conv.theta_gap, gamma=sfl.lr)
+        kappa = np.minimum(
+            np.minimum(kap_mem, kap_t3),
+            np.minimum(kap_t4, float(sfl.max_batch))
+        )
+        return BSProblem(
+            a=a, b_const=b_const, c=c, d=d, kappa=kappa,
+            theta_gap=self.conv.theta_gap, gamma=sfl.lr
+        )
 
     def theta(self, b: np.ndarray, cuts: np.ndarray) -> float:
         l_c = int(np.max(cuts))
-        return self.conv.theta_objective(
-            self.lat.per_round_effective(b, cuts), b, l_c)
+        return self.conv.theta_objective(self.lat.per_round_effective(b, cuts), b, l_c)
 
     # ------------------------------------------------------------------
-    def solve(self, b0=None, cuts0=None, max_iter: int = 10,
-              tol: float = 1e-6) -> HASFLDecision:
+    def solve(
+        self, b0=None, cuts0=None, max_iter: int = 10,
+        tol: float = 1e-6
+    ) -> HASFLDecision:
         n, l = len(self.devices), self.profile.n_layers
         b = np.asarray(b0 if b0 is not None else np.full(n, 16), int)
-        cuts = np.asarray(cuts0 if cuts0 is not None
-                          else np.full(n, max(1, l // 4)), int)
+        cuts = np.asarray(
+            cuts0 if cuts0 is not None
+            else np.full(n, max(1, l // 4)), int
+        )
         history = [self.theta(b, cuts)]
         for _ in range(max_iter):
             # --- BS step (Proposition 1) --------------------------------
@@ -103,12 +110,13 @@ class HASFLOptimizer:
             b_new = solve_bs(prob, b0=np.asarray(b, float))
             # accept if it improves; also accept while infeasible (inf->inf)
             # so the caps can grow across iterations.
-            if self.theta(b_new, cuts) <= history[-1] or \
-                    not np.isfinite(history[-1]):
+            if self.theta(b_new, cuts) <= history[-1] or not np.isfinite(history[-1]):
                 b = b_new
             # --- MS step (Dinkelbach, warm-started from current cuts) ---
-            ms = MSProblem(self.profile, self.devices, self.sfl, self.conv,
-                           np.asarray(b, float))
+            ms = MSProblem(
+                self.profile, self.devices, self.sfl, self.conv,
+                np.asarray(b, float)
+            )
             cuts_new = ms.solve(cuts0=np.asarray(cuts, int))
             if self.theta(b, cuts_new) <= self.theta(b, cuts):
                 cuts = cuts_new

@@ -58,8 +58,10 @@ class BSProblem:
         return 2 * self.b_const * num / b ** 3
 
 
-def newton_jacobi(prob: BSProblem, b0=None, max_iter: int = 200,
-                  tol: float = 1e-8) -> np.ndarray:
+def newton_jacobi(
+    prob: BSProblem, b0=None, max_iter: int = 200,
+    tol: float = 1e-8
+) -> np.ndarray:
     """Solve dTheta'/db = 0 (i.e. Xi = 0 coordinate-wise), continuous."""
     n = prob.n
     b = np.full(n, 32.0) if b0 is None else np.asarray(b0, float).copy()
@@ -87,8 +89,10 @@ def newton_jacobi(prob: BSProblem, b0=None, max_iter: int = 200,
     return b
 
 
-def round_bs(prob: BSProblem, b_hat: np.ndarray,
-             exhaustive_limit: int = 8) -> np.ndarray:
+def round_bs(
+    prob: BSProblem, b_hat: np.ndarray,
+    exhaustive_limit: int = 8
+) -> np.ndarray:
     """Integer projection per Proposition 1 / Eqn (48)."""
     n = prob.n
     kappa = np.maximum(prob.kappa, 1.0)
@@ -106,8 +110,7 @@ def round_bs(prob: BSProblem, b_hat: np.ndarray,
     # feasibility fallback: if every candidate corner violates C1 (the
     # denominator), take the largest allowed batch everywhere (minimum
     # variance); the BCD outer loop re-derives caps from it and recovers.
-    fallback = np.asarray([max(1, int(np.floor(kappa[i])))
-                           for i in range(n)], int)
+    fallback = np.asarray([max(1, int(np.floor(kappa[i]))) for i in range(n)], int)
     if n <= exhaustive_limit:
         # exact search over the <=3^N corner combinations
         best, best_val = None, float("inf")

@@ -42,7 +42,8 @@ class ConvergenceModel:
         g = self.sfl.lr
         n = len(b)
         sig_total = self.profile.sigma_sq_total()
-        return self.beta * g * sig_total * float(np.sum(1.0 / np.asarray(b, float))) / n ** 2
+        inv_b = float(np.sum(1.0 / np.asarray(b, float)))
+        return self.beta * g * sig_total * inv_b / n ** 2
 
     def drift_term(self, l_c: int) -> float:
         """1{I>1} * 4 beta^2 gamma^2 I^2 * sum_{j<=L_c} G_j^2."""
@@ -56,17 +57,23 @@ class ConvergenceModel:
     def bound(self, b: np.ndarray, l_c: int, rounds: int) -> float:
         """Theorem 1 RHS for R = rounds."""
         g = self.sfl.lr
-        return (2 * self.theta_gap / (g * rounds)
-                + self.variance_term(b) + self.drift_term(l_c))
+        return (
+            2 * self.theta_gap / (g * rounds)
+            + self.variance_term(b) + self.drift_term(l_c)
+        )
 
-    def denominator(self, b: np.ndarray, l_c: int,
-                    eps: Optional[float] = None) -> float:
+    def denominator(
+        self, b: np.ndarray, l_c: int,
+        eps: Optional[float] = None
+    ) -> float:
         """A(b, mu) = eps - variance - drift (must be > 0 for feasibility)."""
         eps = self.sfl.epsilon if eps is None else eps
         return eps - self.variance_term(b) - self.drift_term(l_c)
 
-    def rounds_needed(self, b: np.ndarray, l_c: int,
-                      eps: Optional[float] = None) -> float:
+    def rounds_needed(
+        self, b: np.ndarray, l_c: int,
+        eps: Optional[float] = None
+    ) -> float:
         """Corollary 1: minimum R to reach eps (inf if infeasible)."""
         g = self.sfl.lr
         a = self.denominator(b, l_c, eps)
@@ -74,8 +81,10 @@ class ConvergenceModel:
             return float("inf")
         return 2 * self.theta_gap / (g * a)
 
-    def theta_objective(self, per_round_latency: float, b: np.ndarray,
-                        l_c: int, eps: Optional[float] = None) -> float:
+    def theta_objective(
+        self, per_round_latency: float, b: np.ndarray,
+        l_c: int, eps: Optional[float] = None
+    ) -> float:
         """Eqn (43): total-latency objective of the BCD problem."""
         r = self.rounds_needed(b, l_c, eps)
         return r * per_round_latency
@@ -85,8 +94,7 @@ class ConvergenceModel:
 # Online estimation of (beta, sigma_j^2, G_j^2) — Wang et al. [24] style
 # ---------------------------------------------------------------------------
 
-def estimate_constants(grad_samples: list, param_deltas=None,
-                       grad_deltas=None) -> dict:
+def estimate_constants(grad_samples: list, param_deltas=None, grad_deltas=None) -> dict:
     """Estimate Assumption-1/2 constants from per-layer gradient samples.
 
     grad_samples: list over minibatches of lists over layers of flat grads
@@ -97,14 +105,15 @@ def estimate_constants(grad_samples: list, param_deltas=None,
     g_sq = np.zeros(n_layers)
     sigma_sq = np.zeros(n_layers)
     for j in range(n_layers):
-        stack = np.stack([np.asarray(g[j], np.float64).ravel()
-                          for g in grad_samples])
+        stack = np.stack([np.asarray(g[j], np.float64).ravel() for g in grad_samples])
         g_sq[j] = float(np.mean(np.sum(stack ** 2, axis=1)))
         mean = stack.mean(axis=0)
         sigma_sq[j] = float(np.mean(np.sum((stack - mean) ** 2, axis=1)))
     out = {"g_sq": g_sq, "sigma_sq": sigma_sq}
     if param_deltas is not None and grad_deltas is not None:
-        betas = [np.linalg.norm(gd) / max(np.linalg.norm(pd), 1e-12)
-                 for pd, gd in zip(param_deltas, grad_deltas)]
+        betas = [
+            np.linalg.norm(gd) / max(np.linalg.norm(pd), 1e-12)
+            for pd, gd in zip(param_deltas, grad_deltas)
+        ]
         out["beta"] = float(np.median(betas))
     return out

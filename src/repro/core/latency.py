@@ -38,13 +38,17 @@ class RoundLatency:
 
     @property
     def t_split(self) -> float:                                   # (38)
-        return (float(np.max(self.t_f + self.t_a_up)) + self.t_s_f
-                + self.t_s_b + float(np.max(self.t_g_down + self.t_b)))
+        return (
+            float(np.max(self.t_f + self.t_a_up)) + self.t_s_f
+            + self.t_s_b + float(np.max(self.t_g_down + self.t_b))
+        )
 
     @property
     def t_agg(self) -> float:                                     # (39)
-        return (max(float(np.max(self.t_c_up)), self.t_s_up)
-                + max(float(np.max(self.t_c_down)), self.t_s_down))
+        return (
+            max(float(np.max(self.t_c_up)), self.t_s_up)
+            + max(float(np.max(self.t_c_down)), self.t_s_down)
+        )
 
 
 # Resource floors: time-varying scenario traces (repro.scenarios) can
@@ -58,8 +62,10 @@ FLOPS_FLOOR = 1.0     # FLOP/s
 
 
 class LatencyModel:
-    def __init__(self, profile: LayerProfile, devices: Sequence[DeviceProfile],
-                 sfl: SFLConfig):
+    def __init__(
+        self, profile: LayerProfile, devices: Sequence[DeviceProfile],
+        sfl: SFLConfig
+    ):
         self.profile = profile
         self.sfl = sfl
         self.set_devices(devices)
@@ -73,16 +79,15 @@ class LatencyModel:
         """
         self.devices = list(devices)
         self.n = len(self.devices)
-        self._f = np.maximum(
-            np.array([d.flops for d in self.devices]), FLOPS_FLOOR)
-        self._r_up = np.maximum(
-            np.array([d.up_bw for d in self.devices]), BW_FLOOR)
-        self._r_down = np.maximum(
-            np.array([d.down_bw for d in self.devices]), BW_FLOOR)
+        self._f = np.maximum(np.array([d.flops for d in self.devices]), FLOPS_FLOOR)
+        self._r_up = np.maximum(np.array([d.up_bw for d in self.devices]), BW_FLOOR)
+        self._r_down = np.maximum(np.array([d.down_bw for d in self.devices]), BW_FLOOR)
         self._rf_up = np.maximum(
-            np.array([d.fed_up_bw for d in self.devices]), BW_FLOOR)
+            np.array([d.fed_up_bw for d in self.devices]), BW_FLOOR
+        )
         self._rf_down = np.maximum(
-            np.array([d.fed_down_bw for d in self.devices]), BW_FLOOR)
+            np.array([d.fed_down_bw for d in self.devices]), BW_FLOOR
+        )
 
     # ------------------------------------------------------------------
     def round_latency(self, b: np.ndarray, cuts: np.ndarray) -> RoundLatency:
@@ -111,8 +116,10 @@ class LatencyModel:
         t_s_up = lam_s / self.sfl.server_fed_bw                   # (35)
         t_c_down = delta / rf_down                                # (36)
         t_s_down = lam_s / self.sfl.server_fed_bw                 # (37)
-        return RoundLatency(t_f, t_a_up, t_s_f, t_s_b, t_g_down, t_b,
-                            t_c_up, t_s_up, t_c_down, t_s_down)
+        return RoundLatency(
+            t_f, t_a_up, t_s_f, t_s_b, t_g_down, t_b,
+            t_c_up, t_s_up, t_c_down, t_s_down
+        )
 
     def t_split(self, b, cuts) -> float:
         return self.round_latency(b, cuts).t_split
@@ -137,28 +144,34 @@ class LatencyModel:
         psi_cum = np.cumsum(p.psi)
         chi_cum = np.cumsum(p.chi)
         opt_state = p.delta * self.sfl.optimizer_state_mult
-        return (np.asarray(b, float) * (psi_cum[j] + chi_cum[j])
-                + opt_state[j] + p.delta[j])
+        return (
+            np.asarray(b, float) * (psi_cum[j] + chi_cum[j])
+            + opt_state[j] + p.delta[j]
+        )
 
     def feasible(self, b, cuts) -> bool:
         mem = np.array([d.memory for d in self.devices])
         return bool(np.all(self.memory_bits(b, cuts) < mem))
 
 
-def sample_devices(n: int, rng: np.random.Generator, *,
-                   flops_range=(1e12, 2e12),
-                   up_range=(75e6, 80e6),
-                   down_range=(360e6, 380e6),
-                   memory_bits: float = 8 * 4e9) -> list:
+def sample_devices(
+    n: int, rng: np.random.Generator, *,
+    flops_range=(1e12, 2e12),
+    up_range=(75e6, 80e6),
+    down_range=(360e6, 380e6),
+    memory_bits: float = 8 * 4e9
+) -> list:
     """Paper Table I heterogeneous device pool."""
     devs = []
     for _ in range(n):
-        devs.append(DeviceProfile(
-            flops=float(rng.uniform(*flops_range)),
-            up_bw=float(rng.uniform(*up_range)),
-            down_bw=float(rng.uniform(*down_range)),
-            fed_up_bw=float(rng.uniform(*up_range)),
-            fed_down_bw=float(rng.uniform(*down_range)),
-            memory=memory_bits,
-        ))
+        devs.append(
+            DeviceProfile(
+                flops=float(rng.uniform(*flops_range)),
+                up_bw=float(rng.uniform(*up_range)),
+                down_bw=float(rng.uniform(*down_range)),
+                fed_up_bw=float(rng.uniform(*up_range)),
+                fed_down_bw=float(rng.uniform(*down_range)),
+                memory=memory_bits,
+            )
+        )
     return devs

@@ -53,16 +53,20 @@ class MSProblem:
         # [N, L] tables over candidate cuts
         self.t3 = bb * (p.rho[None, :] / f + p.psi[None, :] / r_up)
         self.t4 = bb * (p.chi[None, :] / r_down + p.bwd[None, :] / f)
-        self.srv = (bb * ((p.rho[-1] - p.rho)[None, :]
-                          + (p.bwd[-1] - p.bwd)[None, :])
-                    / self.sfl.server_flops)
+        self.srv = (
+            bb
+            * ((p.rho[-1] - p.rho)[None, :] + (p.bwd[-1] - p.bwd)[None, :])
+            / self.sfl.server_flops
+        )
         self.tc_up = np.broadcast_to(p.delta[None, :], (n, l)) / rf_up
         self.tc_down = np.broadcast_to(p.delta[None, :], (n, l)) / rf_down
         self.delta = p.delta
         # memory feasibility per (device, cut) given b (constraint C4)
         psi_cum, chi_cum = np.cumsum(p.psi), np.cumsum(p.chi)
-        mem_need = (bb * (psi_cum + chi_cum)[None, :]
-                    + (p.delta * (1 + self.sfl.optimizer_state_mult))[None, :])
+        mem_need = (
+            bb * (psi_cum + chi_cum)[None, :]
+            + (p.delta * (1 + self.sfl.optimizer_state_mult))[None, :]
+        )
         mem_cap = np.array([d.memory for d in devs])[:, None]
         self.mem_ok = mem_need < mem_cap
 
@@ -76,10 +80,8 @@ class MSProblem:
         srv = float(np.sum(self.srv[idx, j]))
         d = self.delta[j]
         lam_s = len(j) * float(np.max(d)) - float(np.sum(d))
-        t5 = max(float(np.max(self.tc_up[idx, j])),
-                 lam_s / self.sfl.server_fed_bw)
-        t6 = max(float(np.max(self.tc_down[idx, j])),
-                 lam_s / self.sfl.server_fed_bw)
+        t5 = max(float(np.max(self.tc_up[idx, j])), lam_s / self.sfl.server_fed_bw)
+        t6 = max(float(np.max(self.tc_down[idx, j])), lam_s / self.sfl.server_fed_bw)
         return t3 + srv + t4 + (t5 + t6) / self.sfl.agg_interval
 
     def den(self, cuts: np.ndarray) -> float:
@@ -125,8 +127,10 @@ class MSProblem:
                 break
         return cuts
 
-    def solve(self, max_dinkelbach: int = 20, tol: float = 1e-9,
-              cuts0: Optional[np.ndarray] = None) -> np.ndarray:
+    def solve(
+        self, max_dinkelbach: int = 20, tol: float = 1e-9,
+        cuts0: Optional[np.ndarray] = None
+    ) -> np.ndarray:
         """Dinkelbach outer loop; exact enumeration of L_c inside.
 
         ``cuts0`` warm-starts lambda at Num/Den of the previous decision
@@ -140,8 +144,7 @@ class MSProblem:
         best_cuts, best_theta = None, float("inf")
         if cuts0 is not None:
             cuts0 = np.asarray(cuts0, int)
-            mem_ok = bool(np.all(
-                self.mem_ok[np.arange(len(cuts0)), cuts0 - 1]))
+            mem_ok = bool(np.all(self.mem_ok[np.arange(len(cuts0)), cuts0 - 1]))
             if mem_ok and self.den(cuts0) > 0:
                 best_cuts, best_theta = cuts0.copy(), self.theta(cuts0)
                 lam = self.num(cuts0) / self.den(cuts0)

@@ -86,8 +86,10 @@ def _transformer_layer_flops(cfg: ModelConfig, kinds: tuple, seq: int) -> float:
             scores = 2 * seq * seq * cfg.n_heads * hd * 2 * causal
             f += proj + scores
         elif kind == "xattn":
-            proj = 2 * seq * d * hd * cfg.n_heads * 2 \
+            proj = (
+                2 * seq * d * hd * cfg.n_heads * 2
                 + 2 * cfg.encoder_seq * d * hd * cfg.n_kv_heads * 2
+            )
             f += proj + 2 * seq * cfg.encoder_seq * cfg.n_heads * hd * 2
         elif kind == "ffn":
             f += 2 * seq * 3 * d * cfg.d_ff
@@ -126,7 +128,10 @@ def _transformer_layer_params(cfg: ModelConfig, kinds: tuple) -> float:
             p += 3 * d * cfg.resolved_d_ff_expert * cfg.n_experts + d * cfg.n_experts
         elif kind == "mamba":
             d_in = cfg.ssm_expand * d
-            p += 2 * d * d_in + d_in * d_in + d_in * (2 * cfg.ssm_state_dim + 1) + d_in * d
+            p += (
+                2 * d * d_in + d_in * d_in
+                + d_in * (2 * cfg.ssm_state_dim + 1) + d_in * d
+            )
         elif kind == "mlstm":
             d_in = 2 * d
             p += 2 * d * d_in + 3 * d_in * d_in + d_in * d
@@ -135,8 +140,10 @@ def _transformer_layer_params(cfg: ModelConfig, kinds: tuple) -> float:
     return p
 
 
-def model_profile(cfg: ModelConfig, *, seq_len: int = 128,
-                  act_bytes: int = 4, param_bytes: int = 4) -> LayerProfile:
+def model_profile(
+    cfg: ModelConfig, *, seq_len: int = 128,
+    act_bytes: int = 4, param_bytes: int = 4
+) -> LayerProfile:
     """Build the per-cut-point profile the HASFL optimizer consumes."""
     if cfg.family == CNN:
         return _cnn_profile(cfg, act_bytes, param_bytes)
@@ -179,8 +186,7 @@ def model_profile(cfg: ModelConfig, *, seq_len: int = 128,
         g_sq=g_sq, sigma_sq=sigma_sq)
 
 
-def _cnn_profile(cfg: ModelConfig, act_bytes: int,
-                 param_bytes: int) -> LayerProfile:
+def _cnn_profile(cfg: ModelConfig, act_bytes: int, param_bytes: int) -> LayerProfile:
     from repro.models.cnn import _pool_after
     flops, params, psi = [], [], []
     spatial = cfg.image_size

@@ -28,6 +28,7 @@ simulation exact rather than approximate).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
@@ -98,11 +99,9 @@ def clip_by_global_norm(grads, clip: float):
     if not clip:
         return grads
     leaves = jax.tree_util.tree_leaves(grads)
-    norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
     scale = clip_scale_from_norm(norm, clip)
-    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype),
-                                  grads)
+    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype), grads)
 
 
 class SFLEdgeSimulator:
@@ -121,14 +120,18 @@ class SFLEdgeSimulator:
     scheduler and fetches per-round losses once per segment.
     ``engine="legacy"`` preserves the original per-client Python loop —
     the reference for the equivalence regression tests and the
-    ``benchmarks/sim_speed.py`` comparison.  The legacy ``vectorized``
-    bool maps to ``"vectorized"``/``"legacy"`` when ``engine`` is unset.
+    ``benchmarks/sim_speed.py`` comparison.  The pre-scan ``vectorized``
+    bool is deprecated (DeprecationWarning): it still maps to
+    ``"vectorized"``/``"legacy"`` when ``engine`` is unset.
     """
 
-    def __init__(self, model: Model, sampler, test_batch: dict,
-                 devices: Sequence[DeviceProfile], sfl: SFLConfig,
-                 profile: LayerProfile, seed: int = 0,
-                 vectorized: bool = True, engine: Optional[str] = None):
+    def __init__(
+        self, model: Model, sampler, test_batch: dict,
+        devices: Sequence[DeviceProfile], sfl: SFLConfig,
+        profile: LayerProfile, seed: int = 0,
+        vectorized: Optional[bool] = None,
+        engine: Optional[str] = None
+    ):
         self.model = model
         self.cfg = model.cfg
         self.sampler = sampler
@@ -140,8 +143,18 @@ class SFLEdgeSimulator:
         self.n = len(devices)
         self.available = np.ones(self.n, bool)
         self.rng = np.random.default_rng(seed)
+        if vectorized is not None:
+            # legacy bool from the pre-scan era: kept as an alias so old
+            # drivers keep running, but the engine name is the real API
+            warnings.warn(
+                "SFLEdgeSimulator(vectorized=...) is deprecated; pass "
+                "engine='vectorized'/'legacy' (or leave engine unset for "
+                "the default) instead",
+                DeprecationWarning, stacklevel=2)
+            if engine is None:
+                engine = "vectorized" if vectorized else "legacy"
         if engine is None:
-            engine = "vectorized" if vectorized else "legacy"
+            engine = "vectorized"
         if engine not in ("legacy", "vectorized", "scan"):
             raise ValueError(f"unknown round engine {engine!r}")
         self.engine = engine
@@ -155,12 +168,13 @@ class SFLEdgeSimulator:
         if self.vectorized:
             self._stacked = SP.replicate_units(units, self.n)
         else:
-            self._client_units = [jax.tree_util.tree_map(jnp.copy, units)
-                                  for _ in range(self.n)]
+            self._client_units = [
+                jax.tree_util.tree_map(jnp.copy, units)
+                for _ in range(self.n)
+            ]
 
         def _clipped_grad(units, batch):
-            (loss, aux), g = jax.value_and_grad(
-                self._loss, has_aux=True)(units, batch)
+            (loss, aux), g = jax.value_and_grad(self._loss, has_aux=True)(units, batch)
             return (loss, aux), clip_by_global_norm(g, self.sfl.clip_norm)
 
         # clip inside the jitted grad so the legacy engine pays no eager
@@ -169,12 +183,10 @@ class SFLEdgeSimulator:
         self._eval_fn = jax.jit(self._eval)
         # the previous stacked state is dead after each round/segment, so
         # donate it and let XLA update in place instead of copying [N, ...]
-        self._round_fn = jax.jit(self._vectorized_round,
-                                 donate_argnums=(0,))
+        self._round_fn = jax.jit(self._vectorized_round, donate_argnums=(0,))
         if engine == "scan":
             self.store = DeviceClientStore.from_sampler(sampler)
-            self._scan_fn = jax.jit(self._scan_segment,
-                                    donate_argnums=(0,))
+            self._scan_fn = jax.jit(self._scan_segment, donate_argnums=(0,))
 
     @property
     def client_units(self):
@@ -184,12 +196,13 @@ class SFLEdgeSimulator:
         [N, ...] representation, returned as nested tuples so that
         item-assignment (which could never write back to the stacked
         state) raises instead of silently no-opping; construct with
-        ``vectorized=False`` to patch client parameters in place.
+        ``engine="legacy"`` to patch client parameters in place.
         """
         if self.vectorized:
-            return tuple(tuple(units)
-                         for units in SP.unstack_unit_trees(self._stacked,
-                                                            self.n))
+            return tuple(
+                tuple(units)
+                for units in SP.unstack_unit_trees(self._stacked, self.n)
+            )
         return self._client_units
 
     # -- loss over unit list -------------------------------------------------
@@ -214,8 +227,10 @@ class SFLEdgeSimulator:
 
     # -- unit-space helpers ---------------------------------------------------
     def _unit_cuts(self, cuts_layers: np.ndarray) -> np.ndarray:
-        return np.asarray([SP.layer_cut_to_unit_cut(self.cfg, int(c))
-                           for c in cuts_layers], int)
+        return np.asarray([
+            SP.layer_cut_to_unit_cut(self.cfg, int(c))
+            for c in cuts_layers
+        ], int)
 
     def _client_slice(self, l_c_units: int):
         """Unit indices belonging to the client-specific (every-I) part."""
@@ -233,17 +248,21 @@ class SFLEdgeSimulator:
         clip = self.sfl.clip_norm
 
         def per_client(units, b):
-            (loss, _), g = jax.value_and_grad(
-                self._loss, has_aux=True)(units, b)
+            (loss, _), g = jax.value_and_grad(self._loss, has_aux=True)(units, b)
             return loss, g
 
         losses, grads = jax.vmap(per_client)(stacked, batch)
         scale = None
         if clip:
-            norm = jnp.sqrt(sum(
-                jnp.sum(jnp.square(l.astype(jnp.float32)),
-                        axis=tuple(range(1, l.ndim)))
-                for l in jax.tree_util.tree_leaves(grads)))
+            norm = jnp.sqrt(
+                sum(
+                    jnp.sum(
+                        jnp.square(l.astype(jnp.float32)),
+                        axis=tuple(range(1, l.ndim)),
+                    )
+                    for l in jax.tree_util.tree_leaves(grads)
+                )
+            )
             scale = clip_scale_from_norm(norm, clip)
         return losses, grads, scale
 
@@ -257,8 +276,10 @@ class SFLEdgeSimulator:
         combination at a given batch shape.
         """
         losses, grads, scale = self._client_grads(stacked, batch)
-        new_stacked = SP.hasfl_round_update(stacked, grads, masks, do_agg,
-                                            self.sfl.lr, grad_scale=scale)
+        new_stacked = SP.hasfl_round_update(
+            stacked, grads, masks, do_agg,
+            self.sfl.lr, grad_scale=scale
+        )
         return new_stacked, losses
 
     def _scan_segment(self, stacked, t0, idx_seg, row_mask, masks, arrays):
@@ -339,8 +360,7 @@ class SFLEdgeSimulator:
         return jnp.stack(losses)
 
     # -- scenario injection ---------------------------------------------------
-    def set_devices(self, devices: Sequence[DeviceProfile],
-                    available=None) -> None:
+    def set_devices(self, devices: Sequence[DeviceProfile], available=None) -> None:
         """Inject the current (possibly trace-evolved) device pool.
 
         Updates the latency model in place so both the wall-clock
@@ -350,23 +370,25 @@ class SFLEdgeSimulator:
         as outage — DESIGN.md §9).
         """
         if len(devices) != self.n:
-            raise ValueError(
-                f"device pool must stay size {self.n}, got {len(devices)}")
+            raise ValueError(f"device pool must stay size {self.n}, got {len(devices)}")
         self.devices = list(devices)
         self.lat.set_devices(self.devices)
-        self.available = (np.ones(self.n, bool) if available is None
-                          else np.asarray(available, bool))
+        self.available = (
+            np.ones(self.n, bool) if available is None
+            else np.asarray(available, bool)
+        )
 
     def _scenario_tick(self, scenario, t: int) -> None:
         """Advance the environment to round ``t``'s trace state."""
         if scenario is not None:
-            self.set_devices(scenario.profiles_at(t),
-                             scenario.available_at(t))
+            self.set_devices(scenario.profiles_at(t), scenario.available_at(t))
 
     # -- main loop ------------------------------------------------------------
-    def run(self, policy_fn: Callable, rounds: int, eval_every: int = 10,
-            reconfigure_every: Optional[int] = None,
-            verbose: bool = False, scenario=None) -> SimResult:
+    def run(
+        self, policy_fn: Callable, rounds: int, eval_every: int = 10,
+        reconfigure_every: Optional[int] = None,
+        verbose: bool = False, scenario=None
+    ) -> SimResult:
         """policy_fn(sim, rng) -> (b [N], cuts_layers [N]).
 
         ``scenario`` (a `repro.scenarios.Scenario`) makes the environment
@@ -377,8 +399,10 @@ class SFLEdgeSimulator:
         """
         reconf = reconfigure_every or self.sfl.agg_interval
         if self.engine == "scan":
-            return self._run_scan(policy_fn, rounds, eval_every, reconf,
-                                  verbose, scenario)
+            return self._run_scan(
+                policy_fn, rounds, eval_every, reconf,
+                verbose, scenario
+            )
         res = SimResult()
         clock = 0.0
         self._scenario_tick(scenario, 0)
@@ -394,14 +418,17 @@ class SFLEdgeSimulator:
             # --- split-training round (a1-a5) + every-I stage (b1-b3) -----
             if self.vectorized:
                 b_max = int(np.max(b))
-                per = [self.sampler.sample(i, int(b[i]), pad_to=b_max)
-                       for i in range(self.n)]
-                batch = {k: jnp.asarray(np.stack([p[k] for p in per]))
-                         for k in per[0]}
-                masks = jnp.asarray(SP.client_unit_mask(
-                    self.cfg, n_units_total, l_c_units))
+                per = [
+                    self.sampler.sample(i, int(b[i]), pad_to=b_max)
+                    for i in range(self.n)
+                ]
+                batch = {k: jnp.asarray(np.stack([p[k] for p in per])) for k in per[0]}
+                masks = jnp.asarray(
+                    SP.client_unit_mask(self.cfg, n_units_total, l_c_units)
+                )
                 self._stacked, losses = self._round_fn(
-                    self._stacked, batch, masks, jnp.asarray(do_agg))
+                    self._stacked, batch, masks, jnp.asarray(do_agg)
+                )
             else:
                 client_idx = self._client_slice(l_c_units)
                 losses = self._legacy_round(b, cuts, client_idx, do_agg)
@@ -411,8 +438,10 @@ class SFLEdgeSimulator:
             if do_agg:
                 clock += self.lat.t_agg(b, cuts)
 
-            b, cuts = self._maybe_reconfigure(res, policy_fn, t, reconf,
-                                              rounds, b, cuts)
+            b, cuts = self._maybe_reconfigure(
+                res, policy_fn, t, reconf,
+                rounds, b, cuts
+            )
             if t % eval_every == 0 or t == rounds:
                 self._record_metrics(res, t, clock, losses, verbose)
         return res
@@ -424,16 +453,46 @@ class SFLEdgeSimulator:
         res.b_history.append(np.asarray(b).copy())
         res.cut_history.append(np.asarray(cuts).copy())
 
-    def _maybe_reconfigure(self, res: SimResult, policy_fn: Callable,
-                           t: int, reconf: int, rounds: int, b, cuts):
+    def _maybe_reconfigure(
+        self, res: SimResult, policy_fn: Callable,
+        t: int, reconf: int, rounds: int, b, cuts
+    ):
         """Reconfiguration (Algorithm 1 line 23)."""
         if t % reconf == 0 and t < rounds:
             b, cuts = policy_fn(self, self.rng)
             self._record_policy(res, b, cuts)
         return b, cuts
 
-    def _record_metrics(self, res: SimResult, t: int, clock: float,
-                        losses, verbose: bool) -> None:
+    def _advance_clock(
+        self, clock: float, t: int, nxt: int, b, cuts,
+        scenario=None
+    ) -> float:
+        """Walk rounds (t, nxt] on the host wall clock.
+
+        Shared by the scan-engine segment scheduler and the
+        ``repro.api`` grid runner so both accumulate bitwise-identical
+        float sums; static pools hoist the per-round latency out of the
+        loop, a scenario re-evaluates it on each round's trace state.
+        """
+        if scenario is None:
+            t_split = self.lat.t_split(b, cuts)
+            t_agg = self.lat.t_agg(b, cuts)
+            for r in range(t + 1, nxt + 1):
+                clock += t_split
+                if r % self.sfl.agg_interval == 0:
+                    clock += t_agg
+        else:
+            for r in range(t + 1, nxt + 1):
+                self._scenario_tick(scenario, r)
+                clock += self.lat.t_split(b, cuts)
+                if r % self.sfl.agg_interval == 0:
+                    clock += self.lat.t_agg(b, cuts)
+        return clock
+
+    def _record_metrics(
+        self, res: SimResult, t: int, clock: float,
+        losses, verbose: bool
+    ) -> None:
         """Eval + metric append; the only host fetch of ``losses``."""
         agg = self._aggregate_model()
         tl, ta = self._eval_fn(agg, self.test_batch)
@@ -444,12 +503,16 @@ class SFLEdgeSimulator:
         res.test_loss.append(float(tl))
         res.test_acc.append(float(ta))
         if verbose:
-            print(f"round {t:5d} clock {clock:9.1f}s "
-                  f"loss {mean_loss:.4f} "
-                  f"acc {float(ta):.4f}", flush=True)
+            print(
+                f"round {t:5d} clock {clock:9.1f}s "
+                f"loss {mean_loss:.4f} "
+                f"acc {float(ta):.4f}", flush=True
+            )
 
-    def _run_scan(self, policy_fn: Callable, rounds: int, eval_every: int,
-                  reconf: int, verbose: bool, scenario=None) -> SimResult:
+    def _run_scan(
+        self, policy_fn: Callable, rounds: int, eval_every: int,
+        reconf: int, verbose: bool, scenario=None
+    ) -> SimResult:
         """Segment scheduler for the scan engine.
 
         Chops the round range at eval / reconfiguration boundaries (the
@@ -470,12 +533,13 @@ class SFLEdgeSimulator:
 
         t = 0
         while t < rounds:
-            nxt = min((t // eval_every + 1) * eval_every,
-                      (t // reconf + 1) * reconf, rounds)
+            nxt = min(
+                (t // eval_every + 1) * eval_every,
+                (t // reconf + 1) * reconf, rounds
+            )
             ucuts = self._unit_cuts(np.asarray(cuts))
             l_c_units = int(np.max(ucuts))
-            masks = jnp.asarray(SP.client_unit_mask(
-                self.cfg, n_units_total, l_c_units))
+            masks = jnp.asarray(SP.client_unit_mask(self.cfg, n_units_total, l_c_units))
             b_pad = pow2_bucket(int(np.max(b)))
             idx = self.store.segment_indices(nxt - t, b, b_pad)
             row_mask = self.store.row_mask(b, b_pad)
@@ -484,52 +548,45 @@ class SFLEdgeSimulator:
                 masks, self.store.arrays)
 
             # clock: accumulate round-by-round on host (bitwise-identical
-            # float summation to the per-round engines); static pools
-            # hoist the per-round latency out of the loop
-            if scenario is None:
-                t_split = self.lat.t_split(b, cuts)
-                t_agg = self.lat.t_agg(b, cuts)
-                for r in range(t + 1, nxt + 1):
-                    clock += t_split
-                    if r % self.sfl.agg_interval == 0:
-                        clock += t_agg
-            else:
-                for r in range(t + 1, nxt + 1):
-                    self._scenario_tick(scenario, r)
-                    clock += self.lat.t_split(b, cuts)
-                    if r % self.sfl.agg_interval == 0:
-                        clock += self.lat.t_agg(b, cuts)
+            # float summation to the per-round engines)
+            clock = self._advance_clock(clock, t, nxt, b, cuts, scenario)
             t = nxt
 
-            b, cuts = self._maybe_reconfigure(res, policy_fn, t, reconf,
-                                              rounds, b, cuts)
+            b, cuts = self._maybe_reconfigure(
+                res, policy_fn, t, reconf,
+                rounds, b, cuts
+            )
             if t % eval_every == 0 or t == rounds:
                 # one [R, N] loss fetch per segment; the eval round is the
                 # segment's last, so its losses are the final ys row
-                self._record_metrics(res, t, clock,
-                                     np.asarray(seg_losses)[-1], verbose)
+                self._record_metrics(res, t, clock, np.asarray(seg_losses)[-1], verbose)
         return res
 
     def _aggregate_model(self):
         """Virtual aggregated model w̄ (analysis object, Sec. IV)."""
         if self.vectorized:
             return SP.mean_unit_trees(self._stacked)
-        return [jax.tree_util.tree_map(lambda *xs: sum(xs) / self.n,
-                                       *[self._client_units[i][u]
-                                         for i in range(self.n)])
-                for u in range(len(self.units))]
+        return [
+            jax.tree_util.tree_map(
+                lambda *xs: sum(xs) / self.n,
+                *[self._client_units[i][u] for i in range(self.n)],
+            )
+            for u in range(len(self.units))
+        ]
 
 
 # ---------------------------------------------------------------------------
 # SPMD pod train step (the dry-run object)
 # ---------------------------------------------------------------------------
 
-def make_hasfl_train_step(model: Model, *, n_clients: int, cut_reps: int,
-                          agg_interval: int, optimizer_name: str = "adam",
-                          lr: float = 3e-4, optimizer_dtype: str = "float32",
-                          grad_accum: int = 1, remat: bool = True,
-                          shard_fn=None, unroll: bool = False,
-                          param_shardings=None, rep_shard_fn=None):
+def make_hasfl_train_step(
+    model: Model, *, n_clients: int, cut_reps: int,
+    agg_interval: int, optimizer_name: str = "adam",
+    lr: float = 3e-4, optimizer_dtype: str = "float32",
+    grad_accum: int = 1, remat: bool = True,
+    shard_fn=None, unroll: bool = False,
+    param_shardings=None, rep_shard_fn=None
+):
     """Build (init_state, train_step) for the production SPMD path.
 
     State: {"client": per-client stacked prefix [N, ...], "server": suffix,
@@ -552,15 +609,19 @@ def make_hasfl_train_step(model: Model, *, n_clients: int, cut_reps: int,
         params = model.init(rng)
         client, server = SP.split_stacked(params, cut_reps)
         client_stacked = SP.replicate_client(client, n_clients)
-        state = {"client": client_stacked, "server": server,
-                 "step": jnp.zeros((), jnp.int32)}
+        state = {
+            "client": client_stacked, "server": server,
+            "step": jnp.zeros((), jnp.int32)
+        }
         state["opt"] = opt.init({"client": client_stacked, "server": server})
         return state
 
     def per_client_loss(client_i, server, batch_i):
         params = SP.merge_stacked(client_i, server)
-        loss, _ = model.loss(params, batch_i, shard_fn=shard_fn, remat=remat,
-                             unroll=unroll, rep_shard_fn=rep_shard_fn)
+        loss, _ = model.loss(
+            params, batch_i, shard_fn=shard_fn, remat=remat,
+            unroll=unroll, rep_shard_fn=rep_shard_fn
+        )
         return loss
 
     def mean_loss(client_stacked, server, batch):
@@ -634,15 +695,16 @@ def make_hasfl_train_step(model: Model, *, n_clients: int, cut_reps: int,
 
         grads = {"client": gc, "server": gs}
         params = {"client": client, "server": server}
-        new_params, new_opt = opt.update(grads, state["opt"], params,
-                                         state["step"])
+        new_params, new_opt = opt.update(grads, state["opt"], params, state["step"])
 
         # every-I aggregation of the client-stacked prefix (Eq. 7) — the
         # same traced-select idiom as the vectorized edge simulator
         step1 = state["step"] + 1
         do_agg = (step1 % agg_interval) == 0
         new_client = SP.aggregate_where(new_params["client"], do_agg)
-        return {"client": new_client, "server": new_params["server"],
-                "opt": new_opt, "step": step1}, {"loss": loss}
+        return {
+            "client": new_client, "server": new_params["server"],
+            "opt": new_opt, "step": step1
+        }, {"loss": loss}
 
     return init_state, train_step

@@ -44,9 +44,11 @@ def to_units(cfg: ModelConfig, params) -> Tuple[list, Callable]:
     units = [{"embed": params["embed"]}] + reps + [head_unit]
 
     def rebuild(us):
-        out = {"embed": us[0]["embed"],
-               "stack": stack_params(us[1:-1]),
-               "final_norm": us[-1]["final_norm"]}
+        out = {
+            "embed": us[0]["embed"],
+            "stack": stack_params(us[1:-1]),
+            "final_norm": us[-1]["final_norm"],
+        }
         if "head" in us[-1]:
             out["head"] = us[-1]["head"]
         if "enc_stack" in us[-1]:
@@ -99,29 +101,34 @@ def merge_units(client_units: list, server_units: list) -> list:
 def stack_unit_trees(client_units: list) -> list:
     """list[N] of list[U] unit trees -> list[U] of [N, ...]-stacked trees."""
     n = len(client_units)
-    return [jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs),
-        *[client_units[i][u] for i in range(n)])
-        for u in range(len(client_units[0]))]
+    return [
+        jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[client_units[i][u] for i in range(n)],
+        )
+        for u in range(len(client_units[0]))
+    ]
 
 
 def unstack_unit_trees(stacked: list, n: int) -> list:
     """Inverse of stack_unit_trees: per-client unit lists (views)."""
-    return [[jax.tree_util.tree_map(lambda a, i=i: a[i], u) for u in stacked]
-            for i in range(n)]
+    return [
+        [jax.tree_util.tree_map(lambda a, i=i: a[i], u) for u in stacked]
+        for i in range(n)
+    ]
 
 
 def replicate_units(units: list, n: int) -> list:
     """Stack N identical copies of a unit list along a leading client axis."""
-    return [jax.tree_util.tree_map(
-        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), u)
-        for u in units]
+    return [
+        jax.tree_util.tree_map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), u)
+        for u in units
+    ]
 
 
 def mean_unit_trees(stacked: list) -> list:
     """Client-mean of every unit — the virtual aggregated model w̄."""
-    return [jax.tree_util.tree_map(lambda a: a.mean(axis=0), u)
-            for u in stacked]
+    return [jax.tree_util.tree_map(lambda a: a.mean(axis=0), u) for u in stacked]
 
 
 def client_unit_mask(cfg: ModelConfig, n_units: int, l_c_units: int):
@@ -138,8 +145,10 @@ def client_unit_mask(cfg: ModelConfig, n_units: int, l_c_units: int):
     return mask
 
 
-def hasfl_round_update(stacked: list, grads: list, masks, do_agg,
-                       gamma: float, grad_scale=None) -> list:
+def hasfl_round_update(
+    stacked: list, grads: list, masks, do_agg,
+    gamma: float, grad_scale=None
+) -> list:
     """One HASFL parameter update over [N, ...]-stacked units (traceable).
 
     The single round body shared by the per-round vectorized engine and
@@ -176,8 +185,7 @@ def hasfl_round_update(stacked: list, grads: list, masks, do_agg,
             # take it exactly on aggregation rounds.
             common = spec.mean(axis=0)
             keep_spec = jnp.logical_and(m > 0, jnp.logical_not(do_agg))
-            return jnp.where(keep_spec, spec,
-                             jnp.broadcast_to(common[None], p.shape))
+            return jnp.where(keep_spec, spec, jnp.broadcast_to(common[None], p.shape))
 
         new_stacked.append(jax.tree_util.tree_map(upd, p_u, g_u))
     return new_stacked

@@ -15,61 +15,36 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
-
 
 def run_edge(args) -> None:
-    import jax
-    from repro.config import get_config, SFLConfig
-    from repro.core.profiles import model_profile
-    from repro.core.latency import sample_devices
-    from repro.core.sfl import SFLEdgeSimulator
-    from repro.core.bcd import HASFLOptimizer
-    from repro.core import baselines
-    from repro.models import build_model
-    from repro.data import (make_cifar_like, partition_iid,
-                            partition_noniid_shards, ClientSampler)
+    from repro.api import ExperimentSpec, Session
+    from repro.config import SFLConfig
     from repro.training.metrics import MetricLogger
 
-    cfg = get_config(args.arch)
-    model = build_model(cfg)
-    rng = np.random.default_rng(args.seed)
-    (xtr, ytr), (xte, yte) = make_cifar_like(
-        cfg.n_classes, args.n_train, args.n_test, cfg.image_size,
-        seed=args.seed)
-    if args.iid:
-        shards = partition_iid(len(ytr), args.clients, rng)
-    else:
-        shards = partition_noniid_shards(ytr, args.clients, rng)
-    sampler = ClientSampler({"images": xtr, "labels": ytr}, shards, rng)
-    sfl = SFLConfig(n_devices=args.clients, agg_interval=args.agg_interval,
-                    lr=args.lr)
-    profile = model_profile(cfg)
-    devices = sample_devices(args.clients, rng)
-
-    sim = SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
-                           devices, sfl, profile, seed=args.seed,
-                           engine=args.engine)
-    scenario = None
-    if args.scenario:
-        # time-varying environment + online re-optimization at every
-        # reconfiguration boundary (the closed control loop, DESIGN.md §9)
-        from repro.scenarios import make_scenario, make_controller
-        scenario = make_scenario(args.scenario, devices,
-                                 seed=args.scenario_seed)
-        policy = make_controller(args.policy, profile, sfl, seed=args.seed)
-    else:
-        opt = HASFLOptimizer(profile, devices, sfl)
-
-        def policy(sim, prng):
-            return baselines.policy(args.policy, opt, prng)
-
-    res = sim.run(policy, rounds=args.rounds, eval_every=args.eval_every,
-                  verbose=True, scenario=scenario)
+    spec = ExperimentSpec(
+        arch=args.arch,
+        n_clients=args.clients,
+        partition="iid" if args.iid else "noniid-shards",
+        n_train=args.n_train,
+        n_test=args.n_test,
+        seed=args.seed,
+        policy=args.policy,
+        estimate=not args.no_estimate,
+        scenario=args.scenario or None,
+        scenario_seed=args.scenario_seed,
+        rounds=args.rounds,
+        eval_every=args.eval_every,
+        engine=args.engine,
+        sfl=SFLConfig(n_devices=args.clients,
+                      agg_interval=args.agg_interval, lr=args.lr),
+    )
+    res = Session(spec).run(verbose=True)
     print(f"final acc={res.test_acc[-1]:.4f} "
           f"converged_time={res.converged_time():.1f}s "
           f"simulated_clock={res.clock[-1]:.1f}s")
     if args.csv:
+        # the spec lands next to the CSV so the run is replayable
+        spec.save(args.csv + ".spec.json")
         log = MetricLogger(args.csv, print_every=0)
         for i, r in enumerate(res.rounds):
             log.log(r, clock=res.clock[i], train_loss=res.train_loss[i],
@@ -137,6 +112,9 @@ def main():
                          "see repro.scenarios.list_presets)")
     ap.add_argument("--scenario-seed", type=int, default=7,
                     dest="scenario_seed")
+    ap.add_argument("--no-estimate", action="store_true", dest="no_estimate",
+                    help="edge mode: skip the HASFL controller's online "
+                         "G²/σ² estimation (priors only)")
     ap.add_argument("--n-train", type=int, default=2000, dest="n_train")
     ap.add_argument("--n-test", type=int, default=400, dest="n_test")
     ap.add_argument("--csv", default=None)

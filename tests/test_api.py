@@ -1,0 +1,259 @@
+"""Tier-1 tests for the declarative `repro.api` layer.
+
+Covers the three satellite guarantees:
+- `ExperimentSpec` JSON round-trip (specs committed next to CSVs must
+  rebuild the exact run),
+- policy-registry completeness against `repro.core.baselines` (a new
+  branch in ``baselines.policy`` without a registry entry fails here),
+- `Session.run_grid` vs sequential `Session.run()` *bitwise* equivalence
+  on a 2x2 policy x scenario grid (the grid runner's headline contract),
+plus the `vectorized=` deprecation mapping.
+"""
+
+import types
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ExperimentSpec,
+    Session,
+    group_cells,
+    list_policies,
+    load_specs,
+    make_policy,
+    register_policy,
+    save_specs,
+)
+from repro.config import SFLConfig, get_config
+from repro.core import baselines
+from repro.core.latency import sample_devices
+from repro.core.profiles import model_profile
+
+
+def _tiny_spec(**overrides) -> ExperimentSpec:
+    base = dict(
+        arch="vgg9-cifar-small",
+        n_clients=3,
+        partition="iid",
+        n_train=180,
+        n_test=45,
+        seed=0,
+        policy="fixed",
+        estimate=False,
+        rounds=4,
+        eval_every=2,
+        reconfigure_every=2,
+        sfl=SFLConfig(agg_interval=2, lr=0.05),
+    )
+    base.update(overrides)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec serialization
+# ---------------------------------------------------------------------------
+
+
+def test_spec_json_roundtrip():
+    spec = _tiny_spec(
+        policy="hasfl",
+        scenario="flaky-uplink",
+        scenario_seed=11,
+        engine="scan",
+        sfl=SFLConfig(agg_interval=3, lr=0.01, clip_norm=0.5),
+    )
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    assert isinstance(back.sfl, SFLConfig)
+    assert back.sfl.clip_norm == 0.5
+    # dataclass equality is field-wise; grid keys must agree too
+    assert back.grid_key() == spec.grid_key()
+
+
+def test_spec_file_roundtrip(tmp_path):
+    spec = _tiny_spec(scenario="stable")
+    path = tmp_path / "cell.spec.json"
+    spec.save(str(path))
+    assert ExperimentSpec.load(str(path)) == spec
+    grid = [spec, spec.replace(policy="hasfl")]
+    gpath = tmp_path / "grid.specs.json"
+    save_specs(str(gpath), grid)
+    assert load_specs(str(gpath)) == grid
+
+
+def test_spec_rejects_unknown_fields_and_versions():
+    d = _tiny_spec().to_dict()
+    d["frobnicate"] = 1
+    with pytest.raises(ValueError, match="unknown spec fields"):
+        ExperimentSpec.from_dict(d)
+    d2 = _tiny_spec().to_dict()
+    d2["spec_version"] = 999
+    with pytest.raises(ValueError, match="spec version"):
+        ExperimentSpec.from_dict(d2)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="partition"):
+        _tiny_spec(partition="dirichlet").validated()
+    with pytest.raises(ValueError, match="engine"):
+        _tiny_spec(engine="warp").validated()
+    with pytest.raises(ValueError, match="rounds"):
+        _tiny_spec(rounds=0).validated()
+
+
+# ---------------------------------------------------------------------------
+# Policy registry
+# ---------------------------------------------------------------------------
+
+
+def test_policy_registry_covers_baselines():
+    """Every name `baselines.policy` dispatches on must be registered
+    (and the registry must not invent names baselines rejects)."""
+    assert set(baselines.POLICY_NAMES) <= set(list_policies())
+    with pytest.raises(KeyError):
+        make_policy("no-such-policy", None, None)
+    opt_stub = types.SimpleNamespace(
+        devices=[None, None],
+        profile=types.SimpleNamespace(n_layers=5),
+        sfl=SFLConfig(n_devices=2),
+    )
+    with pytest.raises(ValueError):
+        baselines.policy("no-such-policy", opt_stub, np.random.default_rng(0))
+
+
+def test_registry_policies_decide():
+    """Each registered baseline policy produces a valid (b, cuts) pair
+    when driven exactly as the simulator drives it."""
+    cfg = get_config("vgg9-cifar-small")
+    profile = model_profile(cfg)
+    n = 3
+    sfl = SFLConfig(n_devices=n, agg_interval=2, lr=0.05)
+    devices = sample_devices(n, np.random.default_rng(0))
+    sim_stub = types.SimpleNamespace(devices=devices)
+    rng = np.random.default_rng(1)
+    for name in baselines.POLICY_NAMES:
+        policy = make_policy(name, profile, sfl, estimate=False, seed=0)
+        b, cuts = policy(sim_stub, rng)
+        assert len(b) == n and len(cuts) == n, name
+        assert np.all(np.asarray(b) >= 1), name
+        assert np.all(
+            (np.asarray(cuts) >= 1) & (np.asarray(cuts) <= profile.n_layers)
+        ), name
+
+
+def test_register_custom_policy():
+    def factory(profile, sfl, *, estimate=True, seed=0, **kw):
+        def policy(sim, rng):
+            n = len(sim.devices)
+            return np.full(n, 4), np.full(n, 2)
+
+        return policy
+
+    register_policy("unit-test-const", factory)
+    try:
+        assert "unit-test-const" in list_policies()
+        policy = make_policy("unit-test-const", None, None)
+        b, cuts = policy(types.SimpleNamespace(devices=[None] * 2), None)
+        assert list(b) == [4, 4] and list(cuts) == [2, 2]
+    finally:
+        from repro.api import policies as registry_module
+
+        registry_module._REGISTRY.pop("unit-test-const")
+
+
+# ---------------------------------------------------------------------------
+# Grid runner
+# ---------------------------------------------------------------------------
+
+
+def _assert_results_bitwise(a, b):
+    assert a.rounds == b.rounds
+    assert a.clock == b.clock
+    assert a.train_loss == b.train_loss
+    assert a.test_loss == b.test_loss
+    assert a.test_acc == b.test_acc
+    assert len(a.b_history) == len(b.b_history)
+    for x, y in zip(a.b_history, b.b_history):
+        np.testing.assert_array_equal(x, y)
+    for x, y in zip(a.cut_history, b.cut_history):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_run_grid_matches_sequential_bitwise():
+    """The acceptance contract: a 2x2 policy x scenario grid through
+    `Session.run_grid` reproduces sequential single-spec `run()` streams
+    bit-for-bit — decisions, clocks, train/test losses, accuracies.
+
+    ``hasfl`` vs ``fixed`` also makes the cells' b_max land in
+    different pow2 buckets, so both the uniform-bucket fast path and
+    the sub-grouped dispatch path execute; the hasfl cells run with
+    online G²/σ² estimation on, covering the boundary state-sync the
+    estimating controller depends on.
+    """
+    specs = [
+        _tiny_spec(policy=policy, scenario=preset,
+                   estimate=policy == "hasfl")
+        for policy in ("hasfl", "fixed")
+        for preset in ("stable", "flaky-uplink")
+    ]
+    assert group_cells(specs) == [[0, 1, 2, 3]]
+
+    sequential = [Session(s).run() for s in specs]
+    gridded = Session.run_grid(specs)
+    assert len(gridded) == len(sequential)
+    for seq_res, grid_res in zip(sequential, gridded):
+        _assert_results_bitwise(seq_res, grid_res)
+    # the scenario must actually have differentiated the cells (same
+    # policy, different presets -> different clocks), or the test is
+    # comparing four copies of one run
+    assert gridded[0].clock != gridded[1].clock
+
+
+def test_run_grid_groups_only_compatible_cells():
+    specs = [
+        _tiny_spec(policy="fixed"),
+        _tiny_spec(policy="hasfl"),
+        _tiny_spec(policy="fixed", seed=1),          # different data/init
+        _tiny_spec(policy="fixed", engine="vectorized"),  # non-scan
+    ]
+    groups = group_cells(specs)
+    assert groups == [[0, 1], [2], [3]]
+
+
+def test_session_is_single_shot():
+    sess = Session(_tiny_spec(rounds=2, eval_every=2))
+    sess.run()
+    with pytest.raises(RuntimeError, match="single-shot"):
+        sess.run()
+
+
+# ---------------------------------------------------------------------------
+# vectorized= deprecation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_vectorized_kwarg_deprecated():
+    sess = Session(_tiny_spec(rounds=2))
+    sim_args = dict(
+        model=sess.model,
+        sampler=sess.sampler,
+        test_batch=sess.sim.test_batch,
+        devices=sess.devices,
+        sfl=sess.sfl,
+        profile=sess.profile,
+    )
+    from repro.core.sfl import SFLEdgeSimulator
+
+    with pytest.warns(DeprecationWarning, match="vectorized"):
+        sim = SFLEdgeSimulator(**sim_args, vectorized=False)
+    assert sim.engine == "legacy"
+    with pytest.warns(DeprecationWarning, match="vectorized"):
+        sim = SFLEdgeSimulator(**sim_args, vectorized=True)
+    assert sim.engine == "vectorized"
+    # engine= wins when both are passed; unset -> default engine
+    with pytest.warns(DeprecationWarning, match="vectorized"):
+        sim = SFLEdgeSimulator(**sim_args, vectorized=False, engine="scan")
+    assert sim.engine == "scan"
+    sim = SFLEdgeSimulator(**sim_args)
+    assert sim.engine == "vectorized"

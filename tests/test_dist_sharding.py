@@ -95,7 +95,7 @@ def test_state_shardings_client_axis_and_step():
     assert len(bsh["tokens"].spec) <= 3
 
 
-def _make_sim(vectorized, n=4, agg=3):
+def _make_sim(engine, n=4, agg=3):
     cfg = get_config("vgg9-cifar-small")
     model = build_model(cfg)
     rng = np.random.default_rng(0)
@@ -107,7 +107,7 @@ def _make_sim(vectorized, n=4, agg=3):
     devs = sample_devices(n, rng)
     prof = model_profile(cfg)
     return SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
-                            devs, sfl, prof, seed=0, vectorized=vectorized)
+                            devs, sfl, prof, seed=0, engine=engine)
 
 
 def test_vectorized_sim_matches_seed_loop():
@@ -117,12 +117,12 @@ def test_vectorized_sim_matches_seed_loop():
         return np.full(s.n, 8), np.full(s.n, 3)
 
     res = {}
-    for vec in (True, False):
-        sim = _make_sim(vectorized=vec)
-        res[vec] = (sim.run(policy, rounds=6, eval_every=1), sim)
+    for engine in ("vectorized", "legacy"):
+        sim = _make_sim(engine=engine)
+        res[engine] = (sim.run(policy, rounds=6, eval_every=1), sim)
 
-    r_v, sim_v = res[True]
-    r_l, sim_l = res[False]
+    r_v, sim_v = res["vectorized"]
+    r_l, sim_l = res["legacy"]
     np.testing.assert_allclose(r_v.train_loss, r_l.train_loss,
                                rtol=2e-3, atol=2e-4)
     np.testing.assert_allclose(r_v.test_loss, r_l.test_loss,
@@ -152,13 +152,15 @@ def test_vectorized_matches_seed_loop_on_reconfiguration():
         return policy
 
     res = {}
-    for vec in (True, False):
-        sim = _make_sim(vectorized=vec, agg=5)
-        res[vec] = sim.run(make_policy(), rounds=6, eval_every=1,
-                           reconfigure_every=2)
-    np.testing.assert_allclose(res[True].train_loss, res[False].train_loss,
+    for engine in ("vectorized", "legacy"):
+        sim = _make_sim(engine=engine, agg=5)
+        res[engine] = sim.run(make_policy(), rounds=6, eval_every=1,
+                              reconfigure_every=2)
+    np.testing.assert_allclose(res["vectorized"].train_loss,
+                               res["legacy"].train_loss,
                                rtol=2e-3, atol=2e-4)
-    np.testing.assert_allclose(res[True].test_loss, res[False].test_loss,
+    np.testing.assert_allclose(res["vectorized"].test_loss,
+                               res["legacy"].test_loss,
                                rtol=2e-3, atol=2e-4)
 
 
