@@ -18,7 +18,10 @@ removed host overhead:
   the scan engine still removes the per-round sampler/stack/upload and the
   undonated [N, ...] state copy.
 - ``--cnn``: vmapping per-client conv weights lowers to batch-grouped
-  convolutions — near-1x on CPU, included for honesty.
+  convolutions — near-1x on CPU, included for honesty.  The paired
+  ``cnn-kernel`` config reruns it with ``conv_impl="kernel"`` (the
+  im2col custom-vjp fast path on CPU, Pallas on TPU; DESIGN.md §11) so
+  the trajectory records the kernel's absolute win next to the oracle.
 
     PYTHONPATH=src python benchmarks/sim_speed.py [--clients 16] [--rounds 20]
     PYTHONPATH=src python benchmarks/sim_speed.py --quick   # CI tier-1 mode
@@ -34,67 +37,81 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(__file__))
 from common import (
-    make_sim, append_csv, git_sha, now_iso,  # noqa: E402
-    runner_id, OUT_DIR
+    make_sim, make_spec, append_csv, git_sha, now_iso,  # noqa: E402
+    runner_id, HARNESS, OUT_DIR
 )
 
 ENGINES = ["legacy", "vectorized", "scan"]
-# runner_id (hostname+CPU fingerprint) identifies the measuring box so
-# the perf gate can later match absolute-ms rows same-box; pre-existing
-# rows are prefix-migrated (padded empty) by append_csv.
+# runner_id (hostname+CPU fingerprint) identifies the measuring box and
+# harness records the perf-harness state (common.setup_harness), so the
+# absolute-ms gate can compare like with like; pre-existing rows are
+# prefix-migrated (padded empty) by append_csv.
 HEADER = [
     "config", "n_clients", "loop_ms", "vectorized_ms", "scan_ms",
     "vec_speedup", "scan_speedup", "git_sha", "timestamp",
-    "runner_id"
+    "runner_id", "harness"
 ]
-# The CI gate *fails* on the speedup-ratio columns: new_ratio vs the
-# committed ratio is algebraically the absolute engine slowdown
-# normalized by the legacy engine's slowdown in the same run, so a
-# slower/faster CI box (which moves every engine together) cancels out
-# while a real de-optimization of the vectorized/scan path does not.
-# Absolute per-engine slowdowns are still *reported* (warnings) so a
-# uniform regression of shared code stays visible in the CI log.
+# The CI gate *fails* on the speedup-ratio columns everywhere:
+# new_ratio vs the committed ratio is algebraically the absolute engine
+# slowdown normalized by the legacy engine's slowdown in the same run,
+# so a slower/faster CI box (which moves every engine together) cancels
+# out while a real de-optimization of the vectorized/scan path does
+# not.  Absolute per-engine slowdowns additionally *fail* when the
+# trajectory has a row from the same (runner_id, harness) — same box,
+# same harness state, so the comparison is meaningful — and only warn
+# against rows from unseen boxes.
 GATE_RATIO_COLS = ("vec_speedup", "scan_speedup")
 WARN_COLS = ("loop_ms", "vectorized_ms", "scan_ms")
 GATE_FACTOR = 1.5
 
 
-def last_committed_rows(path: str) -> dict:
-    """Last row per (config, n_clients) already in the trajectory CSV.
+def last_committed_rows(path: str) -> tuple:
+    """Last committed rows, under the gate's two keyings.
 
-    Rows are keyed positionally against HEADER's leading columns, so
-    pre-provenance rows (no git_sha/timestamp) parse fine.
+    Returns ``(latest, by_box)``: ``latest`` holds the last row per
+    (config, n_clients) — the box-invariant ratio gate's baseline —
+    and ``by_box`` the last row per (config, n_clients, runner_id,
+    harness), the absolute-ms gate's same-box baseline.  Rows are keyed
+    positionally against HEADER's leading columns, so pre-provenance
+    rows (no git_sha/runner_id/harness) parse fine — they simply never
+    land in ``by_box``.
     """
-    out = {}
+    latest, by_box = {}, {}
     if not os.path.exists(path):
-        return out
+        return latest, by_box
     with open(path) as f:
         lines = f.read().splitlines()
     if not lines or lines[0].split(",")[:2] != HEADER[:2]:
-        return out
+        return latest, by_box
     cols = lines[0].split(",")
     for line in lines[1:]:
         parts = line.split(",")
         if len(parts) < 2 or not line.strip():
             continue
         row = dict(zip(cols, parts))
-        out[(row["config"], row["n_clients"])] = row
-    return out
+        latest[(row["config"], row["n_clients"])] = row
+        if row.get("runner_id") and row.get("harness"):
+            by_box[(row["config"], row["n_clients"],
+                    row["runner_id"], row["harness"])] = row
+    return latest, by_box
 
 
-def check_regression(prev: dict, rows: list) -> tuple:
+def check_regression(prev: tuple, rows: list) -> tuple:
     """Compare fresh rows against the last committed ones.
 
-    Returns ``(failures, warnings)``: a drop of any speedup-ratio column
-    below committed/GATE_FACTOR fails (box-invariant — see
-    GATE_RATIO_COLS); absolute per-engine slowdowns >GATE_FACTOR warn.
-    Both sides are min-of-repeats measurements (the noisy-box
-    convention), so comparisons are between floors, not means.
+    Returns ``(failures, warnings)``: a drop of any speedup-ratio
+    column below committed/GATE_FACTOR fails (box-invariant — see
+    GATE_RATIO_COLS); absolute per-engine slowdowns >GATE_FACTOR fail
+    when the baseline row came from the same (runner_id, harness) and
+    warn otherwise.  Both sides are min-of-repeats measurements (the
+    noisy-box convention), so comparisons are between floors, not
+    means.
     """
+    latest, by_box = prev
     failures, warnings = [], []
     for r in rows:
         row = dict(zip(HEADER, [str(x) for x in r]))
-        old = prev.get((row["config"], row["n_clients"]))
+        old = latest.get((row["config"], row["n_clients"]))
         if old is None:
             continue
         for col in GATE_RATIO_COLS:
@@ -107,17 +124,29 @@ def check_regression(prev: dict, rows: list) -> tuple:
                     f"{row['config']} N={row['n_clients']} {col}: "
                     f"{after:.2f}x vs committed {before:.2f}x "
                     f"(>{GATE_FACTOR}x box-normalized slowdown)")
+        same_box = by_box.get((row["config"], row["n_clients"],
+                               row["runner_id"], row["harness"]))
+        abs_old, gated = (same_box, True) if same_box else (old, False)
         for col in WARN_COLS:
             try:
-                before, after = float(old.get(col, "")), float(row[col])
+                before = float(abs_old.get(col, ""))
+                after = float(row[col])
             except ValueError:
                 continue
             if before > 0 and after > GATE_FACTOR * before:
-                warnings.append(
-                    f"{row['config']} N={row['n_clients']} {col}: "
-                    f"{after:.1f} ms vs committed {before:.1f} ms "
-                    f"({after / before:.2f}x absolute — box change or "
-                    f"uniform regression; not gated)")
+                if gated:
+                    failures.append(
+                        f"{row['config']} N={row['n_clients']} {col}: "
+                        f"{after:.1f} ms vs committed {before:.1f} ms "
+                        f"({after / before:.2f}x absolute, same "
+                        f"runner_id+harness — gated)")
+                else:
+                    warnings.append(
+                        f"{row['config']} N={row['n_clients']} {col}: "
+                        f"{after:.1f} ms vs committed {before:.1f} ms "
+                        f"({after / before:.2f}x absolute vs an unseen "
+                        f"box — box change or uniform regression; "
+                        f"not gated)")
     return failures, warnings
 
 
@@ -239,11 +268,24 @@ def main():
         configs = [("lm-tiny", make_lm_tiny)]
         if not args.quick:
             configs.append(("lm-small", make_lm_sim))
-        if args.cnn and not args.quick:
+        if args.cnn:
             def make_cnn(n_clients, engine):
                 sim, _ = make_sim(n_clients=n_clients, iid=True, seed=0, engine=engine)
                 return sim, 8
-            configs.append(("cnn", lambda **kw: make_cnn(**kw)))
+
+            def make_cnn_kernel(n_clients, engine):
+                # conv_impl="kernel" routes the per-client convs through
+                # kernels.ops.batched_conv (im2col custom-vjp on CPU);
+                # the legacy engine ignores it, so its column doubles as
+                # an unchanged baseline for this config
+                from repro.api import Session
+                sess = Session(make_spec(
+                    n_clients=n_clients, iid=True, seed=0, engine=engine,
+                    conv_impl="kernel"))
+                return sess.sim, 8
+            if not args.quick:     # quick keeps only the kernel config
+                configs.append(("cnn", lambda **kw: make_cnn(**kw)))
+            configs.append(("cnn-kernel", lambda **kw: make_cnn_kernel(**kw)))
         for name, factory in configs:
             ms = time_engines(factory, n, args.rounds, args.repeats)
             vec_speedup = ms["legacy"] / ms["vectorized"]
@@ -252,7 +294,7 @@ def main():
                 name, n, round(ms["legacy"], 1),
                 round(ms["vectorized"], 1), round(ms["scan"], 1),
                 round(vec_speedup, 2), round(scan_speedup, 2),
-                sha, ts, rid
+                sha, ts, rid, HARNESS
             ])
             print(
                 f"{name:8s} N={n:3d}  loop {ms['legacy']:8.1f} ms/round  "

@@ -8,6 +8,7 @@ vmapped mega-runs over the scan engine.
 
 from repro.api.grid import group_cells, run_group
 from repro.api.policies import list_policies, make_policy, register_policy
+from repro.api.runners import ExecutionChoice, pick, register_choice
 from repro.api.session import Session, run_grid
 from repro.api.spec import (
     SPEC_VERSION,
@@ -18,9 +19,12 @@ from repro.api.spec import (
 
 __all__ = [
     "SPEC_VERSION",
+    "ExecutionChoice",
     "ExperimentSpec",
     "Session",
     "group_cells",
+    "pick",
+    "register_choice",
     "list_policies",
     "load_specs",
     "make_policy",

@@ -1,0 +1,88 @@
+"""Arch-family x backend execution auto-pick (DESIGN.md §11).
+
+PR 4's grid runner is bitwise-equivalent to sequential execution for
+every arch, but not uniformly *faster*: it wins where cells are small
+and dispatch-bound (LM cells) and — before the batched-conv kernel —
+lost on CPU-conv-bound CNN cells (the 0.76x vgg9 regression).  Rather
+than hand-flagging every sweep, `Session.run_grid(..., runner="auto")`
+and ``scenario_sweep.py --runner auto`` resolve each compatible group
+through this registry: a small table keyed on (arch family, JAX
+backend) that picks the runner AND the kernel impls measured fastest
+for that regime.
+
+The registry only *fills* knobs the spec leaves unset (``conv_impl`` /
+``update_impl`` equal to ``None``); explicitly pinned specs pass
+through untouched, so committed spec files replay exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+from repro.api.spec import ExperimentSpec
+from repro.config import get_config
+
+
+@dataclass(frozen=True)
+class ExecutionChoice:
+    """How one grid-compatible group of cells should execute."""
+
+    runner: str = "grid"                 # "grid" | "sequential"
+    conv_impl: Optional[str] = None      # None = oracle vmapped conv
+    update_impl: Optional[str] = None    # None = inline jnp update
+
+    def __post_init__(self):
+        if self.runner not in ("grid", "sequential"):
+            raise ValueError(f"unknown runner {self.runner!r}")
+
+
+_DEFAULT = ExecutionChoice()
+
+# Measured regimes (DESIGN.md §11; benchmarks/ committed wall_s rows):
+# - CNN cells on CPU: sequential + the im2col custom-vjp conv ("kernel"
+#   dispatches to it off-TPU).  The kernel collapses the vgg9 smoke
+#   sweep 1291.0 s -> 91.3 s sequential; the grid runner, same impls,
+#   takes 184.6 s — cell-batching conv matmuls buys nothing on a CPU
+#   core and thrashes cache (im2col patches are kh*kw x activations,
+#   multiplied by the grid axis), so the registry picks sequential.
+# - token cells: grid + oracle (the dispatch-economy regime — 2.02x on
+#   the smollm-tiny sweep; no conv to replace).
+# - TPU rows keep the grid (batching feeds the MXU instead of fighting
+#   a cache) and also fuse the clip+SGD update, a no-op gain on CPU
+#   where "kernel" update dispatch falls back to the same jnp algebra.
+_REGISTRY = {
+    ("cnn", "cpu"): ExecutionChoice("sequential", conv_impl="kernel"),
+    ("cnn", "tpu"): ExecutionChoice("grid", conv_impl="kernel",
+                                    update_impl="kernel"),
+    ("token", "tpu"): ExecutionChoice("grid", update_impl="kernel"),
+}
+
+
+def arch_family(arch: str) -> str:
+    return "cnn" if get_config(arch).is_cnn else "token"
+
+
+def pick(spec: ExperimentSpec) -> ExecutionChoice:
+    """The registry's choice for one cell (grid + oracle when unkeyed)."""
+    return _REGISTRY.get(
+        (arch_family(spec.arch), jax.default_backend()), _DEFAULT)
+
+
+def apply_choice(spec: ExperimentSpec,
+                 choice: Optional[ExecutionChoice] = None) -> ExperimentSpec:
+    """Fill the spec's unset kernel knobs from the (or a given) choice."""
+    choice = choice or pick(spec)
+    overrides = {}
+    if spec.conv_impl is None and choice.conv_impl is not None:
+        overrides["conv_impl"] = choice.conv_impl
+    if spec.update_impl is None and choice.update_impl is not None:
+        overrides["update_impl"] = choice.update_impl
+    return spec.replace(**overrides) if overrides else spec
+
+
+def register_choice(family: str, backend: str,
+                    choice: ExecutionChoice) -> None:
+    """Override one (arch family, backend) cell — measurement-driven."""
+    _REGISTRY[(family, backend)] = choice

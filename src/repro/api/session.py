@@ -87,6 +87,8 @@ class Session:
             self.profile,
             seed=spec.seed,
             engine=spec.resolved_engine,
+            conv_impl=spec.conv_impl,
+            update_impl=spec.update_impl,
         )
         if spec.scenario is not None:
             from repro.scenarios import make_scenario
@@ -187,6 +189,7 @@ class Session:
         cls,
         specs: Sequence[Union[ExperimentSpec, "Session"]],
         *,
+        runner: Optional[str] = None,
         verbose: bool = False,
     ) -> List[SimResult]:
         """Run a grid of cells, batching compatible ones (DESIGN.md §10).
@@ -198,13 +201,41 @@ class Session:
         Incompatible or non-scan cells fall back to sequential
         `run()`.  Results come back in input order and are bitwise
         identical to running each spec alone.
+
+        ``runner``: ``None``/``"grid"`` batches every compatible group
+        (the historical behavior); ``"sequential"`` forces per-cell
+        `run()`; ``"auto"`` consults the `repro.api.runners` registry
+        per group — it fills unset kernel impls (specs only; already
+        built Sessions are rejected, their simulators are pinned) and
+        picks grid vs sequential per arch family x backend
+        (DESIGN.md §11).
         """
+        if runner not in (None, "grid", "sequential", "auto"):
+            raise ValueError(f"unknown runner {runner!r}")
+        if runner == "auto":
+            from repro.api import runners as R
+
+            if any(isinstance(s, Session) for s in specs):
+                raise ValueError(
+                    "runner='auto' needs ExperimentSpecs (a built "
+                    "Session's kernel impls are already pinned)"
+                )
+            specs = [R.apply_choice(s) for s in specs]
         sessions = [s if isinstance(s, Session) else cls(s) for s in specs]
         results: List[Optional[SimResult]] = [None] * len(sessions)
         for idxs in group_cells([sessions[i].spec for i in range(len(sessions))]):
             members = [sessions[i] for i in idxs]
-            if len(members) == 1:
-                results[idxs[0]] = members[0].run(verbose=verbose)
+            sequential = (
+                len(members) == 1
+                or runner == "sequential"
+                or (
+                    runner == "auto"
+                    and R.pick(members[0].spec).runner == "sequential"
+                )
+            )
+            if sequential:
+                for i, sess in zip(idxs, members):
+                    results[i] = sess.run(verbose=verbose)
                 continue
             for sess in members:
                 sess._consume()
@@ -214,7 +245,10 @@ class Session:
 
 
 def run_grid(
-    specs: Sequence[Union[ExperimentSpec, Session]], *, verbose: bool = False
+    specs: Sequence[Union[ExperimentSpec, Session]],
+    *,
+    runner: Optional[str] = None,
+    verbose: bool = False,
 ) -> List[SimResult]:
     """Module-level alias for `Session.run_grid`."""
-    return Session.run_grid(specs, verbose=verbose)
+    return Session.run_grid(specs, runner=runner, verbose=verbose)

@@ -28,6 +28,11 @@ SPEC_VERSION = 1
 
 PARTITIONS = ("iid", "noniid-shards")
 ENGINES = (None, "legacy", "vectorized", "scan")
+# conv_impl: None = the oracle vmapped conv (bitwise contracts);
+# "kernel" = the backend-dispatched fast path (Pallas on TPU, im2col on
+# CPU); the rest pin an exact `kernels.ops.batched_conv` impl (tests).
+CONV_IMPLS = (None, "kernel", "interpret", "im2col", "ref")
+UPDATE_IMPLS = (None, "kernel", "interpret", "ref")
 
 
 @dataclass(frozen=True)
@@ -63,6 +68,12 @@ class ExperimentSpec:
     eval_every: int = 10
     reconfigure_every: Optional[int] = None
     engine: Optional[str] = None
+    # kernel knobs (DESIGN.md §11): part of the recipe because they
+    # change the executable (and, for conv_impl, the numerics at fp32
+    # tolerance), so committed spec files pin them.  `runner="auto"`
+    # fills them from the `repro.api.runners` registry.
+    conv_impl: Optional[str] = None
+    update_impl: Optional[str] = None
     sfl: SFLConfig = SFLConfig(lr=0.05)
 
     # -- validation ---------------------------------------------------------
@@ -91,6 +102,15 @@ class ExperimentSpec:
             raise ValueError("eval_every must be >= 1")
         if self.reconfigure_every is not None and self.reconfigure_every < 1:
             raise ValueError("reconfigure_every must be >= 1 or None")
+        if self.conv_impl not in CONV_IMPLS:
+            raise ValueError(
+                f"unknown conv_impl {self.conv_impl!r}; known: {CONV_IMPLS}"
+            )
+        if self.update_impl not in UPDATE_IMPLS:
+            raise ValueError(
+                f"unknown update_impl {self.update_impl!r}; "
+                f"known: {UPDATE_IMPLS}"
+            )
         if not isinstance(self.sfl, SFLConfig):
             raise ValueError("sfl must be an SFLConfig")
         return self
@@ -136,6 +156,10 @@ class ExperimentSpec:
             self.rounds,
             self.eval_every,
             self.resolved_reconfigure_every,
+            # different kernel impls are different executables (and
+            # different numerics) — never stack them in one grid
+            self.conv_impl,
+            self.update_impl,
         )
 
     # -- JSON round-trip ----------------------------------------------------

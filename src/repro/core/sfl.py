@@ -130,7 +130,9 @@ class SFLEdgeSimulator:
         devices: Sequence[DeviceProfile], sfl: SFLConfig,
         profile: LayerProfile, seed: int = 0,
         vectorized: Optional[bool] = None,
-        engine: Optional[str] = None
+        engine: Optional[str] = None,
+        conv_impl: Optional[str] = None,
+        update_impl: Optional[str] = None
     ):
         self.model = model
         self.cfg = model.cfg
@@ -159,6 +161,24 @@ class SFLEdgeSimulator:
             raise ValueError(f"unknown round engine {engine!r}")
         self.engine = engine
         self.vectorized = engine != "legacy"
+        # Kernel knobs (DESIGN.md §11).  ``conv_impl`` switches the
+        # vectorized/scan engines' per-client grads from vmap-of-grad
+        # (whose batched-weight convs lower to XLA CPU's slow grouped
+        # convs) to grad-of-sum over the model's stacked loss, with the
+        # convolutions routed through `kernels.ops.batched_conv`.  The
+        # user-facing value "kernel" means the backend-dispatched fast
+        # path (ops impl "auto": Pallas on TPU, im2col on CPU); None
+        # keeps the bitwise oracle.  The legacy engine ignores both (it
+        # has no stacked state).  ``update_impl`` likewise routes
+        # `split.hasfl_round_update` through the fused clip+SGD kernel.
+        if conv_impl is not None and getattr(model, "stacked_loss", None) is None:
+            raise ValueError(
+                f"conv_impl={conv_impl!r} needs a model with a stacked "
+                "loss (CNN family); this model has none")
+        self.conv_impl = conv_impl
+        self.update_impl = update_impl
+        self._conv_ops_impl = {"kernel": "auto"}.get(conv_impl, conv_impl)
+        self._update_ops_impl = {"kernel": "auto"}.get(update_impl, update_impl)
 
         params = model.init(jax.random.PRNGKey(seed))
         units, self.rebuild = SP.to_units(self.cfg, params)
@@ -244,14 +264,29 @@ class SFLEdgeSimulator:
         units.  The clip factor is returned separately (same math as
         ``clip_by_global_norm``) so the round update can fuse it into its
         single pass over the gradients instead of materializing a scaled
-        copy of the whole gradient tree."""
+        copy of the whole gradient tree.
+
+        With ``conv_impl`` set, the vmap-of-grad is replaced by one grad
+        of the *sum* of the model's stacked per-client losses — exact
+        (client i's stacked slice only touches loss i), and it keeps the
+        convolutions inside `ops.batched_conv`'s custom_vjp instead of
+        the vmapped-weights lowering."""
         clip = self.sfl.clip_norm
 
-        def per_client(units, b):
-            (loss, _), g = jax.value_and_grad(self._loss, has_aux=True)(units, b)
-            return loss, g
+        if self.conv_impl is not None:
+            def total(st):
+                losses = self.model.stacked_loss(
+                    st, batch, impl=self._conv_ops_impl)
+                return losses.sum(), losses
 
-        losses, grads = jax.vmap(per_client)(stacked, batch)
+            grads, losses = jax.grad(total, has_aux=True)(stacked)
+        else:
+            def per_client(units, b):
+                (loss, _), g = jax.value_and_grad(
+                    self._loss, has_aux=True)(units, b)
+                return loss, g
+
+            losses, grads = jax.vmap(per_client)(stacked, batch)
         scale = None
         if clip:
             norm = jnp.sqrt(
@@ -278,7 +313,7 @@ class SFLEdgeSimulator:
         losses, grads, scale = self._client_grads(stacked, batch)
         new_stacked = SP.hasfl_round_update(
             stacked, grads, masks, do_agg,
-            self.sfl.lr, grad_scale=scale
+            self.sfl.lr, grad_scale=scale, impl=self._update_ops_impl
         )
         return new_stacked, losses
 

@@ -147,7 +147,7 @@ def client_unit_mask(cfg: ModelConfig, n_units: int, l_c_units: int):
 
 def hasfl_round_update(
     stacked: list, grads: list, masks, do_agg,
-    gamma: float, grad_scale=None
+    gamma: float, grad_scale=None, impl=None
 ) -> list:
     """One HASFL parameter update over [N, ...]-stacked units (traceable).
 
@@ -167,7 +167,31 @@ def hasfl_round_update(
     mean-of-grads / second aggregation pass per unit disappears.  The
     per-client clip factor (``grad_scale``, [N]) is applied inside the
     same pass instead of materializing a scaled gradient tree.
+
+    ``impl`` routes the per-leaf pass through the fused
+    `kernels.ops.clip_sgd` kernel (``"kernel"``/``"interpret"``/
+    ``"ref"``); ``None`` keeps the inline jnp oracle below — the bitwise
+    default every engine-equivalence contract is stated against.
     """
+    if impl is not None:
+        from repro.kernels import ops as KOPS
+
+        n = jax.tree_util.tree_leaves(stacked[0])[0].shape[0]
+        ones = jnp.ones((n,), jnp.float32)
+        scale = grad_scale if grad_scale is not None else ones
+        new_stacked = []
+        for u, (p_u, g_u) in enumerate(zip(stacked, grads)):
+            keep_spec = jnp.logical_and(masks[u] > 0, jnp.logical_not(do_agg))
+
+            def upd_k(p, g, keep_spec=keep_spec):
+                out = KOPS.clip_sgd(
+                    p.reshape(n, -1), g.reshape(n, -1), scale, keep_spec,
+                    gamma=gamma, impl=impl)
+                return out.reshape(p.shape)
+
+            new_stacked.append(jax.tree_util.tree_map(upd_k, p_u, g_u))
+        return new_stacked
+
     new_stacked = []
     for u, (p_u, g_u) in enumerate(zip(stacked, grads)):
         m = masks[u]

@@ -1,0 +1,66 @@
+"""Fused per-client clip-factor + SGD + aggregation-select kernel.
+
+``core.split.hasfl_round_update`` applies, per ``[N, ...]`` unit leaf:
+scale the raw gradient by the per-client clip factor, take one SGD step
+(Eq. 5-6), fold the Eq. 4/Eq. 7 client mean, and select per the traced
+membership/aggregation flag.  As separate XLA ops that is four
+read-modify-write passes over the donated leaf; this kernel fuses them
+into one pass per ``[N, block_d]`` tile, with the client mean reduced
+in-register (the whole N axis lives in one block — N is the cohort
+size, always small next to D).
+
+The traced select condition (``keep_spec``) and the per-client scale
+arrive as kernel *inputs* (a ``[1, 1]`` flag and an ``[N, 1]`` column),
+so one compiled kernel serves every (mask, round, clip) combination —
+same contract as the traced flags in the round executable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ref, g_ref, s_ref, k_ref, o_ref, *, gamma: float, n: int):
+    p = p_ref[...].astype(jnp.float32)                     # [N, bd]
+    g = g_ref[...].astype(jnp.float32) * s_ref[...]        # scale: [N, 1]
+    spec = p - gamma * g
+    common = spec.sum(axis=0, keepdims=True) * (1.0 / n)
+    keep = k_ref[0, 0] > 0
+    o_ref[...] = jnp.where(
+        keep, spec, jnp.broadcast_to(common, spec.shape)).astype(o_ref.dtype)
+
+
+def clip_sgd_update(p, g, scale, keep_spec, *, gamma: float,
+                    block_d: int = 2048, interpret: bool = True):
+    """``p, g: [N, D]``; ``scale: [N]``; ``keep_spec``: traced bool scalar.
+
+    Returns the updated ``[N, D]`` leaf.  D is zero-padded to the block
+    width (padded columns compute garbage-free zeros and are sliced off).
+    """
+    n, d = p.shape
+    block_d = min(block_d, max(d, 1))
+    n_blocks = -(-d // block_d)
+    pad = n_blocks * block_d - d
+    if pad:
+        p = jnp.pad(p, ((0, 0), (0, pad)))
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    s_col = scale.astype(jnp.float32).reshape(n, 1)
+    k_flag = keep_spec.astype(jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, gamma=gamma, n=n),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, n_blocks * block_d), p.dtype),
+        interpret=interpret,
+    )(p, g, s_col, k_flag)
+    return out[:, :d]

@@ -20,3 +20,39 @@ def mlstm_scan_ref(q, k, v, i_gate, f_gate):
 def rmsnorm_ref(x, scale, eps: float = 1e-5):
     from repro.models.layers import rmsnorm
     return rmsnorm(x, scale, eps)
+
+
+def batched_conv_ref(x, w, b, *, stride: int = 1):
+    """Per-client stacked SAME conv, as the model's oracle computes it.
+
+    x: [N, B, H, W, Cin]; w: [N, kh, kw, Cin, Cout]; b: [N, Cout].
+    A vmap of ``lax.conv_general_dilated`` over the client axis — the
+    exact (bitwise) ground truth for the stacked fast paths, and the
+    lowering whose grouped-conv CPU codegen they exist to avoid.
+    """
+    import jax
+
+    def one(xi, wi, bi):
+        y = jax.lax.conv_general_dilated(
+            xi, wi, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return y + bi
+
+    return jax.vmap(one)(x, w, b)
+
+
+def clip_sgd_ref(p, g, scale, keep_spec, *, gamma: float):
+    """The `core.split.hasfl_round_update` per-leaf algebra, verbatim.
+
+    p, g: [N, D]; scale: [N]; keep_spec: traced bool scalar.  Scale the
+    raw gradient per client, one SGD step, client-mean fold, and the
+    membership/aggregation select — the jnp ops in the same order as the
+    inline oracle so the default path stays bitwise.
+    """
+    import jax.numpy as jnp
+
+    g = g * scale.reshape(-1, 1)
+    spec = p - gamma * g.astype(p.dtype)
+    common = spec.mean(axis=0)
+    return jnp.where(keep_spec, spec,
+                     jnp.broadcast_to(common[None], p.shape))

@@ -207,7 +207,12 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool,
         # decode donates the KV/state cache — without it the dry-run
         # double-buffers the cache (measured +6.4 GB/device on phi3
         # decode_32k)
-        donate = (0,) if shape.kind == "train" else             ((1,) if shape.kind == "decode" else ())
+        if shape.kind == "train":
+            donate = (0,)
+        elif shape.kind == "decode":
+            donate = (1,)
+        else:
+            donate = ()
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)

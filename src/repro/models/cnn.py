@@ -120,6 +120,69 @@ def cnn_forward_layers(params: list, x: jax.Array, cfg: ModelConfig,
     return x
 
 
+def cnn_stacked_forward(params: list, x: jax.Array, cfg: ModelConfig,
+                        *, impl: str = "auto") -> jax.Array:
+    """Full forward over [N, ...]-stacked per-client params and batches.
+
+    x: [N, B, H, W, C]; every leaf of ``params`` carries a leading client
+    axis.  Mirrors `cnn_forward_layers` layer by layer, but expresses the
+    per-client convolutions through `kernels.ops.batched_conv` instead of
+    vmapping ``lax.conv`` — vmapping batched *weights* lowers to XLA
+    CPU's slow grouped-conv path (DESIGN.md §11), which this sidesteps.
+    """
+    from repro.kernels import ops as KOPS
+
+    kinds = cnn_layer_kinds(cfg)
+    conv_seen = 0
+    for i, p in enumerate(params):
+        if kinds[i] == "conv":
+            conv_seen += 1
+
+            def conv(q, z, stride=1):
+                return KOPS.batched_conv(z, q["w"], q["b"], stride=stride,
+                                         impl=impl)
+
+            if cfg.residual and "proj" not in p and x.shape[-1] == p["w"].shape[-1]:
+                x = jax.nn.relu(conv(p, x) + x)
+            elif cfg.residual and "proj" in p:
+                x = jax.nn.relu(conv(p, x, 2) + conv(p["proj"], x, 2))
+            else:
+                x = jax.nn.relu(conv(p, x))
+            if _pool_after(cfg, conv_seen):
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 1, 2, 2, 1),
+                    (1, 1, 2, 2, 1), "VALID")
+        else:
+            if x.ndim == 5:
+                if cfg.residual:
+                    x = x.mean(axis=(2, 3))              # global average pool
+                else:
+                    x = x.reshape(x.shape[0], x.shape[1], -1)
+            x = jnp.einsum("nbd,ndo->nbo", x, p["w"]) + p["b"][:, None, :]
+            if kinds[i] == "fc":
+                x = jax.nn.relu(x)
+    return x
+
+
+def cnn_stacked_loss(params: list, images, labels, cfg: ModelConfig,
+                     loss_mask=None, *, impl: str = "auto") -> jax.Array:
+    """Per-client masked-mean NLL [N] over the stacked forward.
+
+    Same per-client semantics as `cnn_loss` (mean over that client's real
+    rows); differentiating the *sum* over clients yields exactly the
+    per-client gradients a vmapped ``grad(cnn_loss)`` would — client i's
+    stacked slice only touches loss i — which is how the simulator's
+    kernel path replaces vmap-of-grad without changing the algorithm.
+    """
+    logits = cnn_stacked_forward(params, images, cfg, impl=impl)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if loss_mask is not None:
+        total = jnp.maximum(loss_mask.sum(axis=1), 1.0)
+        return (nll * loss_mask).sum(axis=1) / total
+    return nll.mean(axis=1)
+
+
 def cnn_loss(params: list, images, labels, cfg: ModelConfig, loss_mask=None):
     logits = cnn_forward_layers(params, images, cfg)
     logp = jax.nn.log_softmax(logits)

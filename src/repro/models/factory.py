@@ -26,6 +26,9 @@ class Model:
     prefill: Callable       # (params, batch) -> (logits, cache)
     decode_step: Callable   # (params, cache, batch) -> (logits, cache)
     split_loss: Callable = None  # HASFL split loss (transformers only)
+    # per-client losses [N] over [N, ...]-stacked params/batches, taking a
+    # kernel impl knob (CNNs only; the simulator's fast-conv path)
+    stacked_loss: Callable = None
 
 
 def _merge_patches(x, patch_embeddings, patch_mask):
@@ -316,4 +319,10 @@ def _build_cnn(cfg: ModelConfig) -> Model:
     def _no_cache(*a, **k):
         raise NotImplementedError("CNNs have no decode path")
 
-    return Model(cfg, init, apply, loss, _no_cache, _no_cache, _no_cache)
+    def stacked_loss(params, batch, impl="auto"):
+        return C.cnn_stacked_loss(
+            params, batch["images"], batch["labels"], cfg,
+            loss_mask=batch.get("loss_mask"), impl=impl)
+
+    return Model(cfg, init, apply, loss, _no_cache, _no_cache, _no_cache,
+                 stacked_loss=stacked_loss)

@@ -85,7 +85,11 @@ def mlstm_block(params: dict, x: jax.Array, n_heads: int, eps: float = 1e-5):
     def heads(t):
         return t.reshape(b, s, n_heads, hd)
 
-    q, k, v = heads(u @ params["w_q"]), heads(u @ params["w_k"]), heads(u @ params["w_v"])
+    q, k, v = (
+        heads(u @ params["w_q"]),
+        heads(u @ params["w_k"]),
+        heads(u @ params["w_v"]),
+    )
     gates = xn.astype(jnp.float32) @ params["w_if"] + params["b_if"]
     i_gate, f_gate = jnp.split(gates.reshape(b, s, 2, n_heads), 2, axis=2)
     h = mlstm_scan_ref(q, k, v, i_gate[:, :, 0], f_gate[:, :, 0])
@@ -113,7 +117,11 @@ def mlstm_block_decode(params, x, state, n_heads: int, eps: float = 1e-5):
     def heads(t):
         return t.reshape(b, n_heads, hd)
 
-    q, k, v = heads(u @ params["w_q"]), heads(u @ params["w_k"]), heads(u @ params["w_v"])
+    q, k, v = (
+        heads(u @ params["w_q"]),
+        heads(u @ params["w_k"]),
+        heads(u @ params["w_v"]),
+    )
     k = (k / np.sqrt(hd)).astype(jnp.float32)
     q, v = q.astype(jnp.float32), v.astype(jnp.float32)
     gates = xn[:, 0].astype(jnp.float32) @ params["w_if"] + params["b_if"]

@@ -1,5 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
 swept over shapes and dtypes (deliverable c)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -93,3 +94,91 @@ def test_ops_dispatch_cpu_falls_back_to_ref():
     ref = REF.flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
                                atol=1e-5)
+
+
+CONV_CASES = [
+    # (n, b, h, w, cin, cout, stride) — odd shapes on purpose: N=1,
+    # non-pow2 channels, odd spatial dims, stride 2
+    (1, 2, 8, 8, 3, 5, 1),
+    (3, 4, 16, 16, 3, 16, 1),
+    (2, 4, 9, 9, 7, 11, 2),
+    (4, 3, 8, 8, 4, 8, 2),
+]
+
+
+def _conv_operands(case, seed=4):
+    n, b, h, w, cin, cout, stride = case
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, b, h, w, cin), jnp.float32)
+    wt = _rand(rng, (n, 3, 3, cin, cout), jnp.float32) * 0.2
+    bias = _rand(rng, (n, cout), jnp.float32)
+    return x, wt, bias, stride
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+@pytest.mark.parametrize("impl", ["im2col", "interpret"])
+def test_batched_conv_forward_vs_ref(case, impl):
+    from repro.kernels import ops
+    x, wt, bias, stride = _conv_operands(case)
+    out = ops.batched_conv(x, wt, bias, stride=stride, impl=impl)
+    ref = REF.batched_conv_ref(x, wt, bias, stride=stride)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+def test_batched_conv_vjp_vs_ref(case):
+    """The custom_vjp's dx/dw/db against jax.grad of the oracle.
+
+    The cotangent zeroes client 0's last batch row, standing in for the
+    sampler's padded-row masking: gradients w.r.t. masked rows must not
+    leak into dw/dx.
+    """
+    from repro.kernels import ops
+    x, wt, bias, stride = _conv_operands(case, seed=5)
+
+    def fast(x, w, b):
+        return ops.batched_conv(x, w, b, stride=stride, impl="im2col")
+
+    def oracle(x, w, b):
+        return REF.batched_conv_ref(x, w, b, stride=stride)
+
+    out_f, vjp_f = jax.vjp(fast, x, wt, bias)
+    out_r, vjp_r = jax.vjp(oracle, x, wt, bias)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_r),
+                               rtol=2e-5, atol=2e-5)
+    rng = np.random.default_rng(6)
+    dy = _rand(rng, out_r.shape, jnp.float32)
+    dy = dy.at[0, -1].set(0.0)            # masked/padded batch row
+    for g_f, g_r, name in zip(vjp_f(dy), vjp_r(dy), ("dx", "dw", "db")):
+        np.testing.assert_allclose(
+            np.asarray(g_f), np.asarray(g_r), rtol=2e-4, atol=2e-4,
+            err_msg=name)
+
+
+def test_clip_sgd_interpret_vs_ref():
+    from repro.kernels import ops
+    rng = np.random.default_rng(7)
+    n, d = 5, 300                          # non-pow2 D exercises padding
+    p = _rand(rng, (n, d), jnp.float32)
+    g = _rand(rng, (n, d), jnp.float32)
+    scale = jnp.asarray(rng.uniform(0.1, 1.0, (n,)), jnp.float32)
+    # keep_spec is the unit's traced membership-AND-not-aggregating flag
+    # (a scalar — membership is per *unit*, not per client)
+    for keep in (jnp.asarray(True), jnp.asarray(False)):
+        out = ops.clip_sgd(p, g, scale, keep, gamma=0.05, impl="interpret")
+        ref = REF.clip_sgd_ref(p, g, scale, keep, gamma=0.05)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-6, atol=2e-6)
+
+
+def test_ops_dispatch_rejects_unknown_impl():
+    from repro.kernels import ops
+    x, wt, bias, stride = _conv_operands(CONV_CASES[0])
+    with pytest.raises(ValueError, match="impl"):
+        ops.batched_conv(x, wt, bias, stride=stride, impl="nonsense")
+    with pytest.raises(ValueError, match="impl"):
+        ops.clip_sgd(x[:, 0, 0], x[:, 0, 0], bias[:, 0],
+                     jnp.ones((x.shape[0],), bool), gamma=0.1,
+                     impl="nonsense")
