@@ -42,6 +42,17 @@ CPU-compute-bound, see below): it asserts HASFL reaches the target
 strictly faster than both baselines on ``flaky-uplink`` and exits
 nonzero otherwise — the headline adaptivity claim, gated.
 
+Fault modes (``--fault-modes``, DESIGN.md §12): each cell also carries
+a round fault semantics — ``soft`` (resource-floor degradation, the
+historical behavior), ``dropout`` (offline clients excluded from the
+round), ``deadline`` (+ straggler dropping at ``--deadline-factor`` x
+the cohort median).  Listing several runs the full preset x fault x
+policy grid on paired trace streams, and the summary prints
+per-(preset, fault) time-to-target — the deadline-vs-soft robustness
+numbers.  CI additionally runs ``--smoke-fault`` (churn-heavy x hasfl x
+all three modes) and asserts both fault-aware modes beat soft
+degradation to the common target loss.
+
 Measured regimes (this box, committed wall_s rows): the grid runner is
 about the dispatch/host-overhead economy, so it wins where cells are
 small and numerous — smollm-tiny 6-cell grid: 2.02x warm (1.20x with
@@ -73,11 +84,13 @@ from common import (
 # amortizes cells, so per-cell attribution is undefined); arch = the
 # cells' model (empty in pre-PR-4 rows: vgg9-cifar-small); conv_impl =
 # the cells' effective conv path (empty = the oracle vmapped conv);
-# harness = common.setup_harness state.  Old files are prefix-migrated.
+# harness = common.setup_harness state; fault_mode = the cells' round
+# fault semantics (empty in pre-PR-7 rows: soft).  New columns go LAST
+# — old files are prefix-migrated.
 HEADER = [
     "preset", "policy", "n_clients", "round", "clock", "train_loss",
     "test_loss", "test_acc", "git_sha", "timestamp", "runner",
-    "wall_s", "arch", "conv_impl", "harness"
+    "wall_s", "arch", "conv_impl", "harness", "fault_mode"
 ]
 
 
@@ -90,8 +103,9 @@ def time_to_target(res, target: float) -> float:
 
 
 def build_specs(args) -> list:
-    """The policy x preset grid, one spec per cell (row-major: preset
-    outer, policy inner — the CSV/summary iteration order)."""
+    """The preset x fault-mode x policy grid, one spec per cell
+    (row-major: preset outer, fault mode, then policy — the CSV/summary
+    iteration order)."""
     from repro.config import get_config
 
     # token archs train on synthetic LM data, which is IID-only
@@ -105,8 +119,10 @@ def build_specs(args) -> list:
             scenario=preset, scenario_seed=args.scenario_seed,
             rounds=args.rounds, eval_every=args.eval_every,
             reconfigure_every=args.reconf_every,
-            seq_len=args.seq_len, conv_impl=args.conv_impl)
+            seq_len=args.seq_len, conv_impl=args.conv_impl,
+            fault_mode=fault, deadline_factor=args.deadline_factor)
         for preset in args.presets
+        for fault in args.fault_modes
         for policy in args.policies
     ]
 
@@ -121,7 +137,7 @@ def run_sequential(specs) -> tuple:
         t_cell = time.time()
         res = Session(spec).run()
         print(
-            f"{spec.scenario:18s} {spec.policy:10s} "
+            f"{spec.scenario:18s} {spec.fault_mode:8s} {spec.policy:10s} "
             f"clock={res.clock[-1]:10.1f}s "
             f"best_loss={min(res.test_loss):.4f} "
             f"acc={res.test_acc[-1]:.4f} "
@@ -140,7 +156,7 @@ def run_grid(specs, runner: str = "grid") -> tuple:
     wall = time.time() - t0
     for spec, res in zip(specs, results):
         print(
-            f"{spec.scenario:18s} {spec.policy:10s} "
+            f"{spec.scenario:18s} {spec.fault_mode:8s} {spec.policy:10s} "
             f"clock={res.clock[-1]:10.1f}s "
             f"best_loss={min(res.test_loss):.4f} "
             f"acc={res.test_acc[-1]:.4f} [{runner}]", flush=True
@@ -208,27 +224,35 @@ def append_rows(specs, results, runner, wall, sha, ts, rows) -> None:
                 round(res.test_loss[k], 5),
                 round(res.test_acc[k], 5), sha, ts, runner,
                 round(wall, 1), spec.arch,
-                spec.conv_impl or "", HARNESS
+                spec.conv_impl or "", HARNESS, spec.fault_mode
             ])
 
 
 def summarize(args, specs, results) -> dict:
+    """Per-preset time-to-target: target = worst best-loss across that
+    preset's cells (every policy AND fault mode provably reaches it), so
+    fault modes compare on one common loss bar — the deadline-vs-soft
+    time-to-target numbers the fault column records."""
     summary = {}
     by_preset = {}
     for spec, res in zip(specs, results):
-        by_preset.setdefault(spec.scenario, {})[spec.policy] = res
+        by_preset.setdefault(spec.scenario, {})[
+            (spec.fault_mode, spec.policy)] = res
     for preset in args.presets:
         cells = by_preset[preset]
         target = max(min(r.test_loss) for r in cells.values())
-        summary[preset] = {p: time_to_target(r, target) for p, r in cells.items()}
-        print(
-            f"--- {preset}: target test_loss {target:.4f}; "
-            "time-to-target "
-            + "  ".join(
-                f"{p}={summary[preset][p]:.1f}s"
-                for p in args.policies
-            ), flush=True
-        )
+        summary[preset] = {
+            k: time_to_target(r, target) for k, r in cells.items()
+        }
+        for fault in args.fault_modes:
+            print(
+                f"--- {preset} [{fault}]: target test_loss {target:.4f}; "
+                "time-to-target "
+                + "  ".join(
+                    f"{p}={summary[preset][(fault, p)]:.1f}s"
+                    for p in args.policies
+                ), flush=True
+            )
     return summary
 
 
@@ -264,6 +288,19 @@ def main():
              "grid vs sequential from the measured-fastest table"
     )
     ap.add_argument(
+        "--fault-modes", nargs="*", default=["soft"], dest="fault_modes",
+        choices=["soft", "dropout", "deadline"],
+        help="round fault semantics per cell (DESIGN.md §12); listing "
+             "several runs the full preset x fault x policy grid, so "
+             "deadline-vs-soft time-to-target lands in one summary"
+    )
+    ap.add_argument(
+        "--deadline-factor", type=float, default=2.0,
+        dest="deadline_factor",
+        help="straggler deadline as a multiple of the available "
+             "cohort's median phase latency (fault_mode=deadline)"
+    )
+    ap.add_argument(
         "--conv-impl", default=None, dest="conv_impl",
         choices=["kernel", "interpret", "im2col", "ref"],
         help="per-client conv path for every cell (default: the oracle "
@@ -291,12 +328,25 @@ def main():
         help="CI mode: 2 presets x 3 policies, asserts the "
              "flaky-uplink adaptivity win"
     )
+    ap.add_argument(
+        "--smoke-fault", action="store_true", dest="smoke_fault",
+        help="CI fault mode: churn-heavy x hasfl x "
+             "{soft, dropout, deadline}; asserts both fault-aware modes "
+             "reach the target loss strictly faster than soft "
+             "degradation"
+    )
     ap.add_argument("--out", default=os.path.join(OUT_DIR, "scenario_sweep.csv"))
     args = ap.parse_args()
     if args.smoke:
         args.presets = ["stable", "flaky-uplink"]
         args.policies = ["hasfl", "fixed", "fixed-ms"]
         args.clients, args.rounds = max(args.clients, 8), 24
+        args.eval_every = args.reconf_every = args.agg_interval = 4
+    if args.smoke_fault:
+        args.presets = ["churn-heavy"]
+        args.policies = ["hasfl"]
+        args.fault_modes = ["soft", "dropout", "deadline"]
+        args.clients, args.rounds = max(args.clients, 8), 16
         args.eval_every = args.reconf_every = args.agg_interval = 4
 
     specs = build_specs(args)
@@ -348,7 +398,7 @@ def main():
     append_csv(args.out, HEADER, rows)
 
     if args.smoke:
-        tt = summary["flaky-uplink"]
+        tt = {p: t for (f, p), t in summary["flaky-uplink"].items()}
         losers = [p for p in args.policies if p != "hasfl" and tt["hasfl"] >= tt[p]]
         if losers:
             print(
@@ -359,6 +409,20 @@ def main():
         print(
             f"SMOKE OK: hasfl {tt['hasfl']:.1f}s beats "
             + ", ".join(f"{p} {tt[p]:.1f}s" for p in args.policies if p != "hasfl")
+        )
+    if args.smoke_fault:
+        tt = {f: t for (f, p), t in summary["churn-heavy"].items()}
+        losers = [f for f in ("dropout", "deadline") if tt[f] >= tt["soft"]]
+        if losers:
+            print(
+                f"SMOKE-FAULT FAIL: {losers} not faster than soft "
+                f"degradation on churn-heavy ({tt})", file=sys.stderr
+            )
+            sys.exit(1)
+        print(
+            f"SMOKE-FAULT OK: churn-heavy time-to-target "
+            f"soft={tt['soft']:.1f}s dropout={tt['dropout']:.1f}s "
+            f"deadline={tt['deadline']:.1f}s"
         )
 
 

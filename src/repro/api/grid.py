@@ -99,9 +99,15 @@ def run_group(sessions, *, verbose: bool = False) -> list:
 
     # one executable per (segment length, b_pad, sub-group size); sim0's
     # bound segment body is shared by every cell (identical model + SFL
-    # config is what grid_key guarantees)
+    # config is what grid_key guarantees).  Fault mode is part of
+    # grid_key, so either every cell feeds a [R, N] participation plan
+    # (mapped over the grid axis) or none does (soft: parts=None).
+    faulty = spec0.fault_mode != "soft"
     grid_fn = jax.jit(
-        jax.vmap(sim0._scan_segment, in_axes=(0, None, 0, 0, 0, None)),
+        jax.vmap(
+            sim0._scan_segment,
+            in_axes=(0, None, 0, 0, 0, None, 0 if faulty else None),
+        ),
         donate_argnums=(0,),
     )
     arrays = sim0.store.arrays
@@ -117,9 +123,11 @@ def run_group(sessions, *, verbose: bool = False) -> list:
 
     grid = _stack_cells([sim._stacked for sim in sims])
 
-    def plans(members, seg, b_pad):
-        """Stack the member cells' per-segment gather plans/masks."""
-        idx, rmask, masks = [], [], []
+    def plans(members, t, nxt, b_pad):
+        """Stack the member cells' per-segment gather plans/masks and
+        (under a non-soft fault mode) participation plans."""
+        seg = nxt - t
+        idx, rmask, masks, parts = [], [], [], []
         for g in members:
             b, cuts = decisions[g]
             l_c_units = int(np.max(sims[g]._unit_cuts(cuts)))
@@ -128,10 +136,14 @@ def run_group(sessions, *, verbose: bool = False) -> list:
             )
             idx.append(sims[g].store.segment_indices(seg, b, b_pad))
             rmask.append(sims[g].store.row_mask(b, b_pad))
+            if faulty:
+                parts.append(sims[g]._segment_participation(
+                    t, nxt, b, cuts, sessions[g].scenario))
         return (
             jnp.asarray(np.stack(idx)),
             jnp.asarray(np.stack(rmask)),
             jnp.asarray(np.stack(masks)),
+            jnp.stack(parts) if faulty else None,
         )
 
     t = 0
@@ -141,7 +153,6 @@ def run_group(sessions, *, verbose: bool = False) -> list:
             (t // reconf + 1) * reconf,
             rounds,
         )
-        seg = nxt - t
         t0 = jnp.asarray(t, jnp.int32)
         buckets = {}
         for g, (b, _) in enumerate(decisions):
@@ -151,8 +162,8 @@ def run_group(sessions, *, verbose: bool = False) -> list:
         if len(buckets) == 1:
             # uniform bucket: the whole grid is one donated carry
             b_pad, members = next(iter(buckets.items()))
-            idx, rmask, masks = plans(members, seg, b_pad)
-            grid, losses = grid_fn(grid, t0, idx, rmask, masks, arrays)
+            idx, rmask, masks, parts = plans(members, t, nxt, b_pad)
+            grid, losses = grid_fn(grid, t0, idx, rmask, masks, arrays, parts)
             losses = np.asarray(losses)
             for g in members:
                 seg_losses[g] = losses[g]
@@ -160,9 +171,9 @@ def run_group(sessions, *, verbose: bool = False) -> list:
             cells = [_cell_state(grid, g) for g in range(n_cells)]
             new_cells = [None] * n_cells
             for b_pad, members in sorted(buckets.items()):
-                idx, rmask, masks = plans(members, seg, b_pad)
+                idx, rmask, masks, parts = plans(members, t, nxt, b_pad)
                 sub = _stack_cells([cells[g] for g in members])
-                sub, losses = grid_fn(sub, t0, idx, rmask, masks, arrays)
+                sub, losses = grid_fn(sub, t0, idx, rmask, masks, arrays, parts)
                 losses = np.asarray(losses)
                 for j, g in enumerate(members):
                     new_cells[g] = _cell_state(sub, j)

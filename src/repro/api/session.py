@@ -16,8 +16,11 @@ run the spec describes.  Build a fresh `Session` (cheap) per run.
 
 from __future__ import annotations
 
+import json
 from typing import List, Optional, Sequence, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api import policies as policy_registry
@@ -36,6 +39,7 @@ from repro.data import (
     partition_noniid_shards,
 )
 from repro.models import build_model
+from repro.training import checkpoint as ckpt
 
 
 class Session:
@@ -89,6 +93,8 @@ class Session:
             engine=spec.resolved_engine,
             conv_impl=spec.conv_impl,
             update_impl=spec.update_impl,
+            fault_mode=spec.fault_mode,
+            deadline_factor=spec.deadline_factor,
         )
         if spec.scenario is not None:
             from repro.scenarios import make_scenario
@@ -107,6 +113,7 @@ class Session:
         )
         self._opt: Optional[HASFLOptimizer] = None
         self._ran = False
+        self._resume: Optional[dict] = None
 
     def _build_data(self, spec: ExperimentSpec):
         """(train arrays, test batch, labels for non-IID sharding)."""
@@ -170,11 +177,117 @@ class Session:
             )
         self._ran = True
 
+    # -- crash-safe snapshots (DESIGN.md §12) --------------------------------
+
+    def _snapshot_cb(self, t: int, clock: float, b, cuts, res: SimResult):
+        """Write the full run state at round ``t`` (atomic, tmp-then-
+        rename — `training.checkpoint.save_snapshot`).
+
+        Everything the resumed loop touches is captured: the stacked
+        parameters, the decision in force, the metric/decision history,
+        the two host RNG streams (sampling and policy), and the
+        controller's cross-boundary state.  The scenario is *not*
+        snapshotted — it regenerates its trace deterministically from
+        ``spec.scenario_seed``.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(self.sim._stacked)
+        arrays = {f"param_leaf_{i}": np.asarray(x)
+                  for i, x in enumerate(leaves)}
+        arrays.update(
+            b=np.asarray(b),
+            cuts=np.asarray(cuts),
+            res_rounds=np.asarray(res.rounds, np.int64),
+            res_clock=np.asarray(res.clock, np.float64),
+            res_train_loss=np.asarray(res.train_loss, np.float64),
+            res_test_loss=np.asarray(res.test_loss, np.float64),
+            res_test_acc=np.asarray(res.test_acc, np.float64),
+            res_b_history=np.asarray(res.b_history),
+            res_cut_history=np.asarray(res.cut_history),
+        )
+        meta = {
+            "clock": float(clock),
+            "treedef": str(treedef),
+            "n_param_leaves": len(leaves),
+            "rng_sampler": self.sampler.rng.bit_generator.state,
+            "rng_sim": self.sim.rng.bit_generator.state,
+            "spec": self.spec.to_dict(),
+        }
+        state_fn = getattr(self.policy, "state_dict", None)
+        if state_fn is not None:
+            meta["controller"] = state_fn()
+        ckpt.save_snapshot(self.spec.checkpoint_dir, t, arrays, meta)
+
+    def _restore_state(self, arrays: dict, meta: dict) -> None:
+        """Load a snapshot back onto this (freshly built) session."""
+        leaves, treedef = jax.tree_util.tree_flatten(self.sim._stacked)
+        if meta["n_param_leaves"] != len(leaves) or \
+                meta["treedef"] != str(treedef):
+            raise ValueError(
+                "snapshot parameter tree does not match the spec's model "
+                f"({meta['n_param_leaves']} leaves vs {len(leaves)})")
+        new_leaves = [
+            jnp.asarray(ckpt.as_leaf_dtype(arrays[f"param_leaf_{i}"],
+                                           np.asarray(l).dtype))
+            for i, l in enumerate(leaves)
+        ]
+        self.sim._stacked = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        self.sampler.rng.bit_generator.state = meta["rng_sampler"]
+        self.sim.rng.bit_generator.state = meta["rng_sim"]
+        if "controller" in meta:
+            self.policy.load_state_dict(meta["controller"])
+        res = SimResult(
+            rounds=[int(x) for x in arrays["res_rounds"]],
+            clock=[float(x) for x in arrays["res_clock"]],
+            train_loss=[float(x) for x in arrays["res_train_loss"]],
+            test_loss=[float(x) for x in arrays["res_test_loss"]],
+            test_acc=[float(x) for x in arrays["res_test_acc"]],
+            b_history=[np.asarray(r) for r in arrays["res_b_history"]],
+            cut_history=[np.asarray(r) for r in arrays["res_cut_history"]],
+        )
+        self._resume = {
+            "t": int(meta["step"]),
+            "clock": float(meta["clock"]),
+            "b": np.asarray(arrays["b"]),
+            "cuts": np.asarray(arrays["cuts"]),
+            "res": res,
+        }
+
+    @classmethod
+    def resume(cls, spec: ExperimentSpec, checkpoint_dir: Optional[str] = None,
+               step: Optional[int] = None) -> "Session":
+        """Rebuild a session from the latest (or given) snapshot under
+        ``checkpoint_dir`` (default: ``spec.checkpoint_dir``); its
+        `run()` then continues bitwise-identically to an uninterrupted
+        run of the same spec — same decision stream, clock floats, eval
+        losses, and final parameters.
+        """
+        spec = spec.validated()
+        path = checkpoint_dir or spec.checkpoint_dir
+        if path is None:
+            raise ValueError("no checkpoint_dir on the spec or the call")
+        arrays, meta = ckpt.load_snapshot(path, step)
+        saved = dict(meta["spec"])
+        # the dir itself may legitimately differ (moved snapshots); the
+        # json round-trip normalizes containers so the comparison sees
+        # exactly what the snapshot recorded
+        saved.pop("checkpoint_dir", None)
+        ours = json.loads(json.dumps(spec.to_dict()))
+        ours.pop("checkpoint_dir", None)
+        if saved != ours:
+            raise ValueError(
+                "snapshot was written by a different spec; refusing to "
+                "resume (diff keys: "
+                f"{sorted(k for k in ours if saved.get(k) != ours[k])})")
+        sess = cls(spec)
+        sess._restore_state(arrays, meta)
+        return sess
+
     # -- execution ----------------------------------------------------------
 
     def run(self, *, verbose: bool = False) -> SimResult:
         """Run this cell alone (any engine)."""
         self._consume()
+        snapshot_cb = self._snapshot_cb if self.spec.checkpoint_every else None
         return self.sim.run(
             self.policy,
             rounds=self.spec.rounds,
@@ -182,6 +295,9 @@ class Session:
             reconfigure_every=self.spec.reconfigure_every,
             verbose=verbose,
             scenario=self.scenario,
+            checkpoint_every=self.spec.checkpoint_every,
+            snapshot_cb=snapshot_cb,
+            resume=self._resume,
         )
 
     @classmethod

@@ -33,6 +33,11 @@ ENGINES = (None, "legacy", "vectorized", "scan")
 # CPU); the rest pin an exact `kernels.ops.batched_conv` impl (tests).
 CONV_IMPLS = (None, "kernel", "interpret", "im2col", "ref")
 UPDATE_IMPLS = (None, "kernel", "interpret", "ref")
+# fault_mode (DESIGN.md §12): "soft" = resource-floor degradation (full
+# participation, the historical bitwise behavior); "dropout" = offline
+# clients excluded from the round; "deadline" = dropout + straggler
+# dropping at deadline_factor x the cohort median phase latency.
+FAULT_MODES = ("soft", "dropout", "deadline")
 
 
 @dataclass(frozen=True)
@@ -74,6 +79,16 @@ class ExperimentSpec:
     # fills them from the `repro.api.runners` registry.
     conv_impl: Optional[str] = None
     update_impl: Optional[str] = None
+    # fault semantics (DESIGN.md §12): how the round treats unavailable /
+    # straggling clients.  deadline_factor only applies to "deadline".
+    fault_mode: str = "soft"
+    deadline_factor: float = 2.0
+    # crash-safe snapshots: every `checkpoint_every` rounds the scan
+    # engine writes a full Session snapshot (params + RNG streams +
+    # controller state + clock) to `checkpoint_dir`; `Session.resume`
+    # continues bitwise-identically from the latest one.  0 disables.
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
     sfl: SFLConfig = SFLConfig(lr=0.05)
 
     # -- validation ---------------------------------------------------------
@@ -111,6 +126,23 @@ class ExperimentSpec:
                 f"unknown update_impl {self.update_impl!r}; "
                 f"known: {UPDATE_IMPLS}"
             )
+        if self.fault_mode not in FAULT_MODES:
+            raise ValueError(
+                f"unknown fault_mode {self.fault_mode!r}; known: {FAULT_MODES}"
+            )
+        if not self.deadline_factor > 0:
+            raise ValueError("deadline_factor must be > 0")
+        if self.checkpoint_every < 0:
+            raise ValueError("checkpoint_every must be >= 0")
+        if self.checkpoint_every and self.checkpoint_dir is None:
+            raise ValueError(
+                "checkpoint_every > 0 needs a checkpoint_dir to write to"
+            )
+        if self.checkpoint_every and self.resolved_engine != "scan":
+            raise ValueError(
+                "checkpointing is a segment-boundary feature — "
+                "engine='scan' (or None) only"
+            )
         if not isinstance(self.sfl, SFLConfig):
             raise ValueError("sfl must be an SFLConfig")
         return self
@@ -144,6 +176,11 @@ class ExperimentSpec:
         """
         if self.resolved_engine != "scan":
             return None
+        if self.checkpoint_every:
+            # snapshot side effects (file writes, resume dicts) are
+            # per-cell host state the vmapped mega-run cannot replay —
+            # checkpointed cells always run alone via `Session.run`
+            return None
         return (
             self.arch,
             self.n_clients,
@@ -160,6 +197,10 @@ class ExperimentSpec:
             # different numerics) — never stack them in one grid
             self.conv_impl,
             self.update_impl,
+            # fault semantics change the participation plan fed to the
+            # scan — never stack different fault modes in one grid
+            self.fault_mode,
+            self.deadline_factor,
         )
 
     # -- JSON round-trip ----------------------------------------------------

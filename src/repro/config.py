@@ -255,8 +255,8 @@ class TrainConfig:
     grad_accum: int = 1
     remat: bool = True
     eval_every: int = 50
-    checkpoint_every: int = 0         # 0 = disabled
-    checkpoint_dir: str = "/tmp/repro_ckpt"
+    # checkpointing is not a TrainConfig concern: the simulation runs
+    # own it declaratively (ExperimentSpec.checkpoint_every/-_dir)
 
 
 @dataclass(frozen=True)

@@ -127,6 +127,82 @@ class LatencyModel:
     def t_agg(self, b, cuts) -> float:
         return self.round_latency(b, cuts).t_agg
 
+    # -- fault-aware round accounting (DESIGN.md §12) -------------------
+    def _server_terms(self, b, cuts, m: np.ndarray):
+        """Eq. 30/31 restricted to the participating subset ``m``: the
+        server only runs forward/backward for activations that actually
+        arrived."""
+        p = self.profile
+        b = np.asarray(b, float)
+        j = np.asarray(cuts, int) - 1
+        srv_fwd = float(np.sum((b * (p.rho[-1] - p.rho[j]))[m]))
+        srv_bwd = float(np.sum((b * (p.bwd[-1] - p.bwd[j]))[m]))
+        return srv_fwd / self.sfl.server_flops, srv_bwd / self.sfl.server_flops
+
+    def masked_round(self, b, cuts, part) -> tuple:
+        """(t_split, t_agg) over the participating subset only.
+
+        ``fault_mode="dropout"`` accounting: offline clients are known at
+        round start (the availability mask), so neither straggler max
+        (Eq. 38) nor the Eq. 39 aggregation terms wait for them, and the
+        server compute sums survivors only.  An all-dropped round is a
+        no-op and contributes zero time.
+        """
+        m = np.asarray(part, bool)
+        if not m.any():
+            return 0.0, 0.0
+        rl = self.round_latency(b, cuts)
+        t_s_f, t_s_b = self._server_terms(b, cuts, m)
+        t_split = (
+            float(np.max((rl.t_f + rl.t_a_up)[m])) + t_s_f + t_s_b
+            + float(np.max((rl.t_g_down + rl.t_b)[m]))
+        )
+        cnt = int(m.sum())
+        p = self.profile
+        delta = p.delta[np.asarray(cuts, int) - 1]
+        lam_s = cnt * float(np.max(delta[m])) - float(np.sum(delta[m]))
+        t_s_up = lam_s / self.sfl.server_fed_bw
+        t_agg = (
+            max(float(np.max(rl.t_c_up[m])), t_s_up)
+            + max(float(np.max(rl.t_c_down[m])), t_s_up)
+        )
+        return t_split, t_agg
+
+    def deadline_round(self, b, cuts, avail, factor: float) -> tuple:
+        """(participation mask, t_split, t_agg) under per-phase deadlines.
+
+        ``fault_mode="deadline"`` accounting: each Eq. 38 barrier gets a
+        deadline of ``factor x`` the available cohort's median phase
+        latency.  Clients missing a deadline are dropped from the round;
+        the barrier clock advances at the deadline (the server cannot
+        observe a miss earlier), not at the straggler max — so a
+        floored-resource outage costs at most ``factor x`` median
+        instead of the enormous soft-degradation max.  Offline clients
+        never participate (and never extend a barrier beyond its
+        deadline); with every client offline the round is a timeless
+        no-op, like `masked_round`.
+        """
+        m0 = np.asarray(avail, bool)
+        if not m0.any():
+            return np.zeros(self.n, bool), 0.0, 0.0
+        rl = self.round_latency(b, cuts)
+        up = rl.t_f + rl.t_a_up
+        down = rl.t_g_down + rl.t_b
+        d_up = factor * float(np.median(up[m0]))
+        d_down = factor * float(np.median(down[m0]))
+        m1 = m0 & (up <= d_up)
+        part = m1 & (down <= d_down)
+        t_up = min(float(np.max(up[m0])), d_up)
+        # phase 2 runs only for clients whose activations arrived (m1)
+        t_s_f, t_s_b = self._server_terms(b, cuts, m1)
+        t_down = min(float(np.max(down[m1])), d_down) if m1.any() else 0.0
+        t_split = t_up + t_s_f + t_s_b + t_down
+        if part.any():
+            _, t_agg = self.masked_round(b, cuts, part)
+        else:
+            t_agg = 0.0
+        return part, t_split, t_agg
+
     def total(self, b, cuts, rounds: int) -> float:               # (40)
         rl = self.round_latency(b, cuts)
         return rounds * rl.t_split + (rounds // self.sfl.agg_interval) * rl.t_agg

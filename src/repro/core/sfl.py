@@ -132,7 +132,9 @@ class SFLEdgeSimulator:
         vectorized: Optional[bool] = None,
         engine: Optional[str] = None,
         conv_impl: Optional[str] = None,
-        update_impl: Optional[str] = None
+        update_impl: Optional[str] = None,
+        fault_mode: str = "soft",
+        deadline_factor: float = 2.0
     ):
         self.model = model
         self.cfg = model.cfg
@@ -161,6 +163,18 @@ class SFLEdgeSimulator:
             raise ValueError(f"unknown round engine {engine!r}")
         self.engine = engine
         self.vectorized = engine != "legacy"
+        # Fault semantics (DESIGN.md §12): "soft" is the historical
+        # resource-floor degradation (full participation, bit-for-bit);
+        # "dropout" excludes unavailable clients (the churn/outage mask)
+        # from the round; "deadline" additionally drops clients whose
+        # Eq. 38 phase latency exceeds ``deadline_factor x`` the cohort
+        # median, and advances the round clock at the deadline.
+        if fault_mode not in ("soft", "dropout", "deadline"):
+            raise ValueError(f"unknown fault_mode {fault_mode!r}")
+        if fault_mode == "deadline" and not deadline_factor > 0:
+            raise ValueError("deadline_factor must be > 0")
+        self.fault_mode = fault_mode
+        self.deadline_factor = float(deadline_factor)
         # Kernel knobs (DESIGN.md §11).  ``conv_impl`` switches the
         # vectorized/scan engines' per-client grads from vmap-of-grad
         # (whose batched-weight convs lower to XLA CPU's slow grouped
@@ -301,23 +315,26 @@ class SFLEdgeSimulator:
             scale = clip_scale_from_norm(norm, clip)
         return losses, grads, scale
 
-    def _vectorized_round(self, stacked, batch, masks, do_agg):
+    def _vectorized_round(self, stacked, batch, masks, do_agg, part=None):
         """One HASFL round over [N, ...]-stacked units (jitted).
 
         Fuses: vmapped per-client grads (with per-client clipping) and the
         Eq. 4 / 5-6 / 7 update rule (`split.hasfl_round_update`, shared
-        with the scan engine) — unit membership and the aggregation flag
-        are traced, so one executable covers every (cut, round)
-        combination at a given batch shape.
+        with the scan engine) — unit membership, the aggregation flag,
+        and the per-round participation vector are traced, so one
+        executable covers every (cut, round, fault) combination at a
+        given batch shape.
         """
         losses, grads, scale = self._client_grads(stacked, batch)
         new_stacked = SP.hasfl_round_update(
             stacked, grads, masks, do_agg,
-            self.sfl.lr, grad_scale=scale, impl=self._update_ops_impl
+            self.sfl.lr, grad_scale=scale, impl=self._update_ops_impl,
+            participation=part
         )
         return new_stacked, losses
 
-    def _scan_segment(self, stacked, t0, idx_seg, row_mask, masks, arrays):
+    def _scan_segment(self, stacked, t0, idx_seg, row_mask, masks, arrays,
+                      parts=None):
         """Run a whole segment of rounds as one jitted ``lax.scan``.
 
         Carry: (stacked units, absolute round counter).  Per step: gather
@@ -325,25 +342,32 @@ class SFLEdgeSimulator:
         pre-drawn ``[R, N, b_pad]`` index plan, run the shared round body,
         and derive the every-I Eq. 7 flag from the traced counter.  The
         per-round client losses come back as the scan ``ys`` — one host
-        fetch per segment instead of per round.  (DESIGN.md §8.)
+        fetch per segment instead of per round.  ``parts`` is the
+        segment's pre-computed ``[R, N]`` participation plan (None on the
+        full-cohort soft path).  (DESIGN.md §8, §12.)
         """
         interval = self.sfl.agg_interval
 
-        def step(carry, idx_r):
+        def step(carry, xs):
             stacked, t = carry
+            idx_r, part_r = xs
             t1 = t + 1
             batch = DeviceClientStore.device_batch(arrays, idx_r, row_mask)
             new_stacked, losses = self._vectorized_round(
-                stacked, batch, masks, (t1 % interval) == 0)
+                stacked, batch, masks, (t1 % interval) == 0, part_r)
             return (new_stacked, t1), losses
 
-        (stacked, _), losses = jax.lax.scan(step, (stacked, t0), idx_seg)
+        (stacked, _), losses = jax.lax.scan(
+            step, (stacked, t0), (idx_seg, parts))
         return stacked, losses
 
-    def _legacy_round(self, b, cuts, client_idx, do_agg):
+    def _legacy_round(self, b, cuts, client_idx, do_agg, part=None):
         """The original per-client Python loop (seed implementation) —
         kept as the reference engine for the equivalence regression and
-        the sim_speed benchmark."""
+        the sim_speed benchmark.  ``part`` ([N] float or None) excludes
+        dropped clients from every mean and holds their client-specific
+        params (the loop-form twin of the stacked participation
+        semantics in `split.hasfl_round_update`)."""
         gamma = self.sfl.lr
         b_max = int(np.max(b))
         losses = []
@@ -358,38 +382,50 @@ class SFLEdgeSimulator:
             losses.append(loss)
             grads_all.append(g)
 
-        # server-common units (> L_c): averaged update, every round (Eq.4).
-        # Base = client mean, matching the vectorized engine (identical to
-        # any single copy while the units are synchronized; correct when a
-        # reconfiguration moves a still-diverged unit to the server side).
-        for u in range(len(self.units)):
-            if u in client_idx:
-                continue
-            mean_g = jax.tree_util.tree_map(
-                lambda *gs: sum(gs) / self.n,
-                *[grads_all[i][u] for i in range(self.n)])
-            mean_p = jax.tree_util.tree_map(
-                lambda *xs: sum(xs) / self.n,
-                *[self._client_units[i][u] for i in range(self.n)])
-            new_common = jax.tree_util.tree_map(
-                lambda p, g: p - gamma * g.astype(p.dtype),
-                mean_p, mean_g)
-            for i in range(self.n):
-                self._client_units[i][u] = new_common
+        if part is None:
+            members = list(range(self.n))
+        else:
+            members = [i for i in range(self.n) if part[i] > 0]
+        cnt = len(members)
 
-        # client-specific units (<= L_c): individual updates (Eq.5-6)
-        for i in range(self.n):
+        # server-common units (> L_c): averaged update, every round (Eq.4)
+        # over the participating clients only; a drop-everyone round holds
+        # params.  Base = client mean, matching the vectorized engine
+        # (identical to any single copy while the units are synchronized;
+        # correct when a reconfiguration moves a still-diverged unit to
+        # the server side).
+        if cnt:
+            for u in range(len(self.units)):
+                if u in client_idx:
+                    continue
+                mean_g = jax.tree_util.tree_map(
+                    lambda *gs: sum(gs) / cnt,
+                    *[grads_all[i][u] for i in members])
+                mean_p = jax.tree_util.tree_map(
+                    lambda *xs: sum(xs) / cnt,
+                    *[self._client_units[i][u] for i in members])
+                new_common = jax.tree_util.tree_map(
+                    lambda p, g: p - gamma * g.astype(p.dtype),
+                    mean_p, mean_g)
+                for i in range(self.n):
+                    self._client_units[i][u] = new_common
+
+        # client-specific units (<= L_c): individual updates (Eq.5-6),
+        # participants only — dropped clients hold their params
+        for i in members:
             for u in client_idx:
                 self._client_units[i][u] = jax.tree_util.tree_map(
                     lambda p, g: p - gamma * g.astype(p.dtype),
                     self._client_units[i][u], grads_all[i][u])
 
-        # client-side aggregation stage, every I (Eq.7)
-        if do_agg:
+        # client-side aggregation stage, every I (Eq.7): survivor mean,
+        # broadcast to everyone (a dropped client re-syncs on the next
+        # aggregation broadcast)
+        if do_agg and cnt:
             for u in client_idx:
                 mean_u = jax.tree_util.tree_map(
-                    lambda *xs: sum(xs) / self.n,
-                    *[self._client_units[i][u] for i in range(self.n)])
+                    lambda *xs: sum(xs) / cnt,
+                    *[self._client_units[i][u] for i in members])
                 for i in range(self.n):
                     self._client_units[i][u] = mean_u
         return jnp.stack(losses)
@@ -418,11 +454,31 @@ class SFLEdgeSimulator:
         if scenario is not None:
             self.set_devices(scenario.profiles_at(t), scenario.available_at(t))
 
+    def _fault_round(self, b, cuts):
+        """(participation, t_split, t_agg) for one round on the CURRENT
+        injected device state, under the active fault mode.
+
+        ``participation`` is None on the soft path (full cohort, the
+        historical bitwise clock), an [N] float32 vector otherwise; the
+        times already account for the fault semantics (survivor-only
+        straggler maxes, deadline-capped barriers — `core.latency`).
+        """
+        if self.fault_mode == "soft":
+            return None, self.lat.t_split(b, cuts), self.lat.t_agg(b, cuts)
+        if self.fault_mode == "dropout":
+            part = np.asarray(self.available, bool)
+            ts, ta = self.lat.masked_round(b, cuts, part)
+            return part.astype(np.float32), ts, ta
+        part, ts, ta = self.lat.deadline_round(
+            b, cuts, np.asarray(self.available, bool), self.deadline_factor)
+        return part.astype(np.float32), ts, ta
+
     # -- main loop ------------------------------------------------------------
     def run(
         self, policy_fn: Callable, rounds: int, eval_every: int = 10,
         reconfigure_every: Optional[int] = None,
-        verbose: bool = False, scenario=None
+        verbose: bool = False, scenario=None,
+        checkpoint_every: int = 0, snapshot_cb=None, resume=None
     ) -> SimResult:
         """policy_fn(sim, rng) -> (b [N], cuts_layers [N]).
 
@@ -431,13 +487,25 @@ class SFLEdgeSimulator:
         trace state, and the state is left injected when ``policy_fn``
         fires at a reconfiguration boundary — closing the control loop
         (observe -> re-optimize -> apply) for every engine.
+
+        ``checkpoint_every`` makes every multiple of it a segment
+        boundary and fires ``snapshot_cb(t, clock, b, cuts, res)`` there
+        (after any reconfiguration/eval, so the snapshot captures the
+        exact mid-run host state); ``resume`` is a dict from a restored
+        snapshot (`Session.resume` assembles it) that continues the run
+        bitwise-identically from its round.  Both are segment-boundary
+        objects: scan engine only.
         """
         reconf = reconfigure_every or self.sfl.agg_interval
         if self.engine == "scan":
             return self._run_scan(
                 policy_fn, rounds, eval_every, reconf,
-                verbose, scenario
+                verbose, scenario, checkpoint_every, snapshot_cb, resume
             )
+        if checkpoint_every or snapshot_cb or resume is not None:
+            raise ValueError(
+                "checkpoint/resume snapshots are segment-boundary objects "
+                "— engine='scan' only")
         res = SimResult()
         clock = 0.0
         self._scenario_tick(scenario, 0)
@@ -449,6 +517,10 @@ class SFLEdgeSimulator:
             ucuts = self._unit_cuts(np.asarray(cuts))
             l_c_units = int(np.max(ucuts))
             do_agg = (t % self.sfl.agg_interval) == 0
+
+            # round t runs (and is priced) against round t's trace state
+            self._scenario_tick(scenario, t)
+            part, t_split, t_agg = self._fault_round(b, cuts)
 
             # --- split-training round (a1-a5) + every-I stage (b1-b3) -----
             if self.vectorized:
@@ -462,16 +534,16 @@ class SFLEdgeSimulator:
                     SP.client_unit_mask(self.cfg, n_units_total, l_c_units)
                 )
                 self._stacked, losses = self._round_fn(
-                    self._stacked, batch, masks, jnp.asarray(do_agg)
+                    self._stacked, batch, masks, jnp.asarray(do_agg),
+                    None if part is None else jnp.asarray(part)
                 )
             else:
                 client_idx = self._client_slice(l_c_units)
-                losses = self._legacy_round(b, cuts, client_idx, do_agg)
+                losses = self._legacy_round(b, cuts, client_idx, do_agg, part)
 
-            self._scenario_tick(scenario, t)
-            clock += self.lat.t_split(b, cuts)
+            clock += t_split
             if do_agg:
-                clock += self.lat.t_agg(b, cuts)
+                clock += t_agg
 
             b, cuts = self._maybe_reconfigure(
                 res, policy_fn, t, reconf,
@@ -510,8 +582,7 @@ class SFLEdgeSimulator:
         loop, a scenario re-evaluates it on each round's trace state.
         """
         if scenario is None:
-            t_split = self.lat.t_split(b, cuts)
-            t_agg = self.lat.t_agg(b, cuts)
+            _, t_split, t_agg = self._fault_round(b, cuts)
             for r in range(t + 1, nxt + 1):
                 clock += t_split
                 if r % self.sfl.agg_interval == 0:
@@ -519,9 +590,10 @@ class SFLEdgeSimulator:
         else:
             for r in range(t + 1, nxt + 1):
                 self._scenario_tick(scenario, r)
-                clock += self.lat.t_split(b, cuts)
+                _, t_split, t_agg = self._fault_round(b, cuts)
+                clock += t_split
                 if r % self.sfl.agg_interval == 0:
-                    clock += self.lat.t_agg(b, cuts)
+                    clock += t_agg
         return clock
 
     def _record_metrics(
@@ -544,43 +616,77 @@ class SFLEdgeSimulator:
                 f"acc {float(ta):.4f}", flush=True
             )
 
+    def _segment_participation(self, t: int, nxt: int, b, cuts, scenario):
+        """Pre-compute the ``[R, N]`` participation plan for rounds
+        (t, nxt] by walking each round's trace state host-side (the same
+        states and order `_advance_clock` re-walks — scenario history is
+        cached, so both see identical floats).  None on the soft path."""
+        if self.fault_mode == "soft":
+            return None
+        plan = []
+        for r in range(t + 1, nxt + 1):
+            self._scenario_tick(scenario, r)
+            p_r, _, _ = self._fault_round(b, cuts)
+            plan.append(p_r)
+        return jnp.asarray(np.stack(plan))
+
     def _run_scan(
         self, policy_fn: Callable, rounds: int, eval_every: int,
-        reconf: int, verbose: bool, scenario=None
+        reconf: int, verbose: bool, scenario=None,
+        checkpoint_every: int = 0, snapshot_cb=None, resume=None
     ) -> SimResult:
         """Segment scheduler for the scan engine.
 
-        Chops the round range at eval / reconfiguration boundaries (the
-        every-I stage needs no boundary — it runs inside the scan on the
-        traced counter), pre-draws each segment's gather plan from the
-        authoritative host RNG, and dispatches one donated scan per
-        segment.  Metrics, clock accounting, and policy calls replicate
-        the per-round engines exactly — under a scenario the clock walks
-        the segment's rounds against the same per-round trace states (and
-        float summation order) the per-round engines use.
+        Chops the round range at eval / reconfiguration / checkpoint
+        boundaries (the every-I stage needs no boundary — it runs inside
+        the scan on the traced counter), pre-draws each segment's gather
+        plan from the authoritative host RNG, and dispatches one donated
+        scan per segment.  Metrics, clock accounting, and policy calls
+        replicate the per-round engines exactly — under a scenario the
+        clock walks the segment's rounds against the same per-round trace
+        states (and float summation order) the per-round engines use.
+        Segment boundaries do not change numerics (a split ``lax.scan``
+        runs the same per-round ops on the same carry), which is what
+        makes checkpointed and resumed runs bitwise-identical to an
+        uninterrupted one.
         """
-        res = SimResult()
-        clock = 0.0
-        self._scenario_tick(scenario, 0)
-        b, cuts = policy_fn(self, self.rng)
-        self._record_policy(res, b, cuts)
+        ckpt = int(checkpoint_every or 0)
+        if resume is not None:
+            res = resume["res"]
+            clock = float(resume["clock"])
+            t = int(resume["t"])
+            b = np.asarray(resume["b"])
+            cuts = np.asarray(resume["cuts"])
+            # params/RNG streams were restored onto self by the caller;
+            # re-inject the snapshot round's trace state (the scenario
+            # regenerates its history deterministically from the seed)
+            self._scenario_tick(scenario, t)
+        else:
+            res = SimResult()
+            clock = 0.0
+            t = 0
+            self._scenario_tick(scenario, 0)
+            b, cuts = policy_fn(self, self.rng)
+            self._record_policy(res, b, cuts)
         n_units_total = len(self.units)
 
-        t = 0
         while t < rounds:
             nxt = min(
                 (t // eval_every + 1) * eval_every,
                 (t // reconf + 1) * reconf, rounds
             )
+            if ckpt:
+                nxt = min(nxt, (t // ckpt + 1) * ckpt)
             ucuts = self._unit_cuts(np.asarray(cuts))
             l_c_units = int(np.max(ucuts))
             masks = jnp.asarray(SP.client_unit_mask(self.cfg, n_units_total, l_c_units))
             b_pad = pow2_bucket(int(np.max(b)))
             idx = self.store.segment_indices(nxt - t, b, b_pad)
             row_mask = self.store.row_mask(b, b_pad)
+            parts = self._segment_participation(t, nxt, b, cuts, scenario)
             self._stacked, seg_losses = self._scan_fn(
                 self._stacked, jnp.asarray(t, jnp.int32), idx, row_mask,
-                masks, self.store.arrays)
+                masks, self.store.arrays, parts)
 
             # clock: accumulate round-by-round on host (bitwise-identical
             # float summation to the per-round engines)
@@ -595,6 +701,10 @@ class SFLEdgeSimulator:
                 # one [R, N] loss fetch per segment; the eval round is the
                 # segment's last, so its losses are the final ys row
                 self._record_metrics(res, t, clock, np.asarray(seg_losses)[-1], verbose)
+            if ckpt and snapshot_cb is not None and t % ckpt == 0:
+                # after reconfigure/eval: the snapshot captures the
+                # decisions and metrics exactly as the resumed loop needs
+                snapshot_cb(t, clock, b, cuts, res)
         return res
 
     def _aggregate_model(self):

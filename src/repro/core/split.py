@@ -147,7 +147,7 @@ def client_unit_mask(cfg: ModelConfig, n_units: int, l_c_units: int):
 
 def hasfl_round_update(
     stacked: list, grads: list, masks, do_agg,
-    gamma: float, grad_scale=None, impl=None
+    gamma: float, grad_scale=None, impl=None, participation=None
 ) -> list:
     """One HASFL parameter update over [N, ...]-stacked units (traceable).
 
@@ -172,6 +172,14 @@ def hasfl_round_update(
     `kernels.ops.clip_sgd` kernel (``"kernel"``/``"interpret"``/
     ``"ref"``); ``None`` keeps the inline jnp oracle below — the bitwise
     default every engine-equivalence contract is stated against.
+
+    ``participation`` ([N] float, 1 = participating) implements partial
+    rounds (DESIGN.md §12): dropped clients contribute neither the
+    Eq. 5-6 update nor the Eq. 4/7 mean — the mean renormalizes over
+    survivors, dropped clients hold their client-specific params through
+    non-agg rounds (re-syncing on the next broadcast), and a
+    drop-everyone round degenerates to holding params everywhere.
+    ``None`` keeps the historical full-cohort path bit-for-bit.
     """
     if impl is not None:
         from repro.kernels import ops as KOPS
@@ -182,11 +190,15 @@ def hasfl_round_update(
         new_stacked = []
         for u, (p_u, g_u) in enumerate(zip(stacked, grads)):
             keep_spec = jnp.logical_and(masks[u] > 0, jnp.logical_not(do_agg))
+            if participation is None:
+                keep_vec = jnp.broadcast_to(keep_spec, (n,))
+            else:
+                keep_vec = jnp.logical_and(keep_spec, participation > 0)
 
-            def upd_k(p, g, keep_spec=keep_spec):
+            def upd_k(p, g, keep_vec=keep_vec):
                 out = KOPS.clip_sgd(
-                    p.reshape(n, -1), g.reshape(n, -1), scale, keep_spec,
-                    gamma=gamma, impl=impl)
+                    p.reshape(n, -1), g.reshape(n, -1), scale, keep_vec,
+                    participation, gamma=gamma, impl=impl)
                 return out.reshape(p.shape)
 
             new_stacked.append(jax.tree_util.tree_map(upd_k, p_u, g_u))
@@ -201,15 +213,33 @@ def hasfl_round_update(
                 g = g * grad_scale.reshape((-1,) + (1,) * (g.ndim - 1))
             # Eq. 5-6: client-specific — per-client SGD
             spec = p - gamma * g.astype(p.dtype)
-            # Eq. 4 == Eq. 7 aggregate: server-common units take the mean
-            # update every round (the client mean is identical to any
-            # single copy while the equal-across-clients invariant holds,
-            # and the correct base when a reconfiguration moves a
-            # diverged unit to the server side); client-specific units
-            # take it exactly on aggregation rounds.
-            common = spec.mean(axis=0)
             keep_spec = jnp.logical_and(m > 0, jnp.logical_not(do_agg))
-            return jnp.where(keep_spec, spec, jnp.broadcast_to(common[None], p.shape))
+            if participation is None:
+                # Eq. 4 == Eq. 7 aggregate: server-common units take the
+                # mean update every round (the client mean is identical
+                # to any single copy while the equal-across-clients
+                # invariant holds, and the correct base when a
+                # reconfiguration moves a diverged unit to the server
+                # side); client-specific units take it exactly on
+                # aggregation rounds.
+                common = spec.mean(axis=0)
+                return jnp.where(
+                    keep_spec, spec,
+                    jnp.broadcast_to(common[None], p.shape))
+            # Partial round: survivor-renormalized mean, dropped clients
+            # hold their params — same op sequence as the kernels.ref
+            # oracle so impl="ref" stays bitwise.
+            w = participation.astype(spec.dtype)
+            w_col = w.reshape((-1,) + (1,) * (spec.ndim - 1))
+            cnt = w.sum()
+            common = (spec * w_col).sum(axis=0) / jnp.maximum(cnt, 1.0)
+            keep = jnp.logical_and(keep_spec, participation > 0).reshape(
+                (-1,) + (1,) * (spec.ndim - 1))
+            use_common = jnp.logical_and(
+                jnp.logical_not(keep_spec), cnt > 0)
+            fallback = jnp.where(
+                use_common, jnp.broadcast_to(common[None], p.shape), p)
+            return jnp.where(keep, spec, fallback)
 
         new_stacked.append(jax.tree_util.tree_map(upd, p_u, g_u))
     return new_stacked

@@ -9,10 +9,13 @@ into one pass per ``[N, block_d]`` tile, with the client mean reduced
 in-register (the whole N axis lives in one block — N is the cohort
 size, always small next to D).
 
-The traced select condition (``keep_spec``) and the per-client scale
-arrive as kernel *inputs* (a ``[1, 1]`` flag and an ``[N, 1]`` column),
-so one compiled kernel serves every (mask, round, clip) combination —
-same contract as the traced flags in the round executable.
+The traced select conditions and the per-client scale arrive as kernel
+*inputs* (``[N, 1]`` columns: scale, per-client keep flag, per-client
+participation weight), so one compiled kernel serves every (mask,
+round, clip, participation) combination — same contract as the traced
+flags in the round executable.  Participation renormalizes the client
+mean over survivors in-register; the drop-everyone round degenerates to
+holding params (see `kernels.ref.clip_sgd_ref`, the oracle).
 """
 from __future__ import annotations
 
@@ -23,19 +26,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(p_ref, g_ref, s_ref, k_ref, o_ref, *, gamma: float, n: int):
+def _kernel(p_ref, g_ref, s_ref, k_ref, w_ref, o_ref, *, gamma: float):
     p = p_ref[...].astype(jnp.float32)                     # [N, bd]
     g = g_ref[...].astype(jnp.float32) * s_ref[...]        # scale: [N, 1]
     spec = p - gamma * g
-    common = spec.sum(axis=0, keepdims=True) * (1.0 / n)
-    keep = k_ref[0, 0] > 0
-    o_ref[...] = jnp.where(
-        keep, spec, jnp.broadcast_to(common, spec.shape)).astype(o_ref.dtype)
+    w = w_ref[...]                                         # [N, 1]
+    cnt = w.sum()
+    common = (spec * w).sum(axis=0, keepdims=True) / jnp.maximum(cnt, 1.0)
+    keep = k_ref[...] > 0                                  # [N, 1]
+    use_common = jnp.logical_and(jnp.logical_not(jnp.any(keep)), cnt > 0)
+    fallback = jnp.where(use_common,
+                         jnp.broadcast_to(common, spec.shape), p)
+    o_ref[...] = jnp.where(keep, spec, fallback).astype(o_ref.dtype)
 
 
-def clip_sgd_update(p, g, scale, keep_spec, *, gamma: float,
-                    block_d: int = 2048, interpret: bool = True):
-    """``p, g: [N, D]``; ``scale: [N]``; ``keep_spec``: traced bool scalar.
+def clip_sgd_update(p, g, scale, keep_spec, participation=None, *,
+                    gamma: float, block_d: int = 2048,
+                    interpret: bool = True):
+    """``p, g: [N, D]``; ``scale, keep_spec: [N]``; ``participation``:
+    ``[N]`` float weights or None (full cohort).
 
     Returns the updated ``[N, D]`` leaf.  D is zero-padded to the block
     width (padded columns compute garbage-free zeros and are sliced off).
@@ -48,19 +57,24 @@ def clip_sgd_update(p, g, scale, keep_spec, *, gamma: float,
         p = jnp.pad(p, ((0, 0), (0, pad)))
         g = jnp.pad(g, ((0, 0), (0, pad)))
     s_col = scale.astype(jnp.float32).reshape(n, 1)
-    k_flag = keep_spec.astype(jnp.float32).reshape(1, 1)
+    k_col = keep_spec.astype(jnp.float32).reshape(n, 1)
+    if participation is None:
+        w_col = jnp.ones((n, 1), jnp.float32)
+    else:
+        w_col = participation.astype(jnp.float32).reshape(n, 1)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, gamma=gamma, n=n),
+        functools.partial(_kernel, gamma=gamma),
         grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec((n, block_d), lambda i: (0, i)),
             pl.BlockSpec((n, block_d), lambda i: (0, i)),
             pl.BlockSpec((n, 1), lambda i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((n, n_blocks * block_d), p.dtype),
         interpret=interpret,
-    )(p, g, s_col, k_flag)
+    )(p, g, s_col, k_col, w_col)
     return out[:, :d]

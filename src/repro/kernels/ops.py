@@ -105,9 +105,14 @@ def batched_conv(x, w, b, *, stride: int = 1, impl: str = "auto"):
 
 
 @functools.partial(jax.jit, static_argnames=("gamma", "impl"))
-def clip_sgd(p, g, scale, keep_spec, *, gamma: float, impl: str = "auto"):
+def clip_sgd(p, g, scale, keep_spec, participation=None, *, gamma: float,
+             impl: str = "auto"):
     """Fused per-client clip + SGD + aggregation-select over one [N, D]
     leaf (the `split.hasfl_round_update` inner loop).
+
+    ``keep_spec`` is a per-client [N] keep vector; ``participation`` an
+    optional [N] survivor-weight vector renormalizing the Eq. 4/7 mean
+    (None = full cohort, the historical bitwise path).
 
     impl: auto | kernel | interpret | ref.  ``ref`` (and ``auto``
     off-TPU) is the same jnp op sequence as the inline update, so the
@@ -118,4 +123,4 @@ def clip_sgd(p, g, scale, keep_spec, *, gamma: float, impl: str = "auto"):
         impl,
         ref=functools.partial(REF.clip_sgd_ref, gamma=gamma),
         kernel=functools.partial(_clip_sgd, gamma=gamma))
-    return fn(p, g, scale, keep_spec)
+    return fn(p, g, scale, keep_spec, participation)

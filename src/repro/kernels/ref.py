@@ -41,18 +41,38 @@ def batched_conv_ref(x, w, b, *, stride: int = 1):
     return jax.vmap(one)(x, w, b)
 
 
-def clip_sgd_ref(p, g, scale, keep_spec, *, gamma: float):
+def clip_sgd_ref(p, g, scale, keep_spec, participation=None, *, gamma: float):
     """The `core.split.hasfl_round_update` per-leaf algebra, verbatim.
 
-    p, g: [N, D]; scale: [N]; keep_spec: traced bool scalar.  Scale the
-    raw gradient per client, one SGD step, client-mean fold, and the
+    p, g: [N, D]; scale: [N]; keep_spec: traced per-client keep vector
+    [N] (client i keeps its own Eq. 5-6 result).  Scale the raw gradient
+    per client, one SGD step, client-mean fold, and the
     membership/aggregation select — the jnp ops in the same order as the
     inline oracle so the default path stays bitwise.
+
+    ``participation`` ([N] float, 1 = participating) renormalizes the
+    Eq. 4/7 mean over survivors; dropped clients contribute nothing and
+    (on non-agg rounds) hold their own params.  ``None`` keeps the exact
+    historical full-cohort mean (``spec.mean``) bit-for-bit.
     """
     import jax.numpy as jnp
 
     g = g * scale.reshape(-1, 1)
     spec = p - gamma * g.astype(p.dtype)
-    common = spec.mean(axis=0)
-    return jnp.where(keep_spec, spec,
-                     jnp.broadcast_to(common[None], p.shape))
+    keep = keep_spec.reshape(-1, 1)
+    if participation is None:
+        common = spec.mean(axis=0)
+        return jnp.where(keep, spec,
+                         jnp.broadcast_to(common[None], p.shape))
+    w = participation.astype(spec.dtype).reshape(-1, 1)
+    cnt = participation.astype(spec.dtype).sum()
+    common = (spec * w).sum(axis=0) / jnp.maximum(cnt, 1.0)
+    # A drop-everyone round has no survivor mean: every client (and the
+    # server-common replicas) holds params.  `keep` is already
+    # keep_spec && part, so any(keep) distinguishes "non-agg round with
+    # survivors" (dropped rows hold p) from "agg/common round" (all rows
+    # take the survivor mean).
+    use_common = jnp.logical_and(jnp.logical_not(jnp.any(keep)), cnt > 0)
+    fallback = jnp.where(use_common,
+                         jnp.broadcast_to(common[None], p.shape), p)
+    return jnp.where(keep, spec, fallback)

@@ -192,6 +192,43 @@ class HASFLController:
         self.decisions += 1
         return d.b, d.cuts
 
+    # -- crash-safe snapshot hooks (DESIGN.md §12) ----------------------
+    #
+    # The complete mutable cross-boundary state: the EMA-blended
+    # Assumption-2 constants, the estimation RNG stream, the warm-start
+    # decision, and the decision counter.  `_opt` is deliberately absent
+    # — `HASFLOptimizer` carries no cross-solve state (warm starts flow
+    # purely through b0/cuts0), so a fresh lazy rebuild is equivalent.
+
+    def state_dict(self) -> dict:
+        state = {
+            "g_sq": np.asarray(self.profile.g_sq).tolist(),
+            "sigma_sq": np.asarray(self.profile.sigma_sq).tolist(),
+            "est_rng": self.est_rng.bit_generator.state,
+            "decisions": int(self.decisions),
+            "prev": None,
+        }
+        if self._prev is not None:
+            b0, cuts0 = self._prev
+            state["prev"] = {
+                "b": np.asarray(b0).tolist(),
+                "cuts": np.asarray(cuts0).tolist(),
+            }
+        return state
+
+    def load_state_dict(self, state: dict) -> None:
+        self.profile.g_sq = np.asarray(state["g_sq"], float)
+        self.profile.sigma_sq = np.asarray(state["sigma_sq"], float)
+        self.est_rng.bit_generator.state = state["est_rng"]
+        self.decisions = int(state["decisions"])
+        if state.get("prev") is None:
+            self._prev = None
+        else:
+            self._prev = (
+                np.asarray(state["prev"]["b"]),
+                np.asarray(state["prev"]["cuts"]),
+            )
+
 
 class BaselineController:
     """Section-VII benchmark policies over the live scenario state.
@@ -214,6 +251,14 @@ class BaselineController:
         else:
             self._opt.set_devices(sim.devices)
         return baselines.policy(self.name, self._opt, rng)
+
+    def state_dict(self) -> dict:
+        # no cross-boundary mutable state (the lazily-built optimizer is
+        # stateless across solves); kept for a uniform snapshot surface
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
+        pass
 
 
 def make_controller(

@@ -1,8 +1,27 @@
-"""Numpy-based checkpointing (no external deps)."""
+"""Numpy-based checkpointing (no external deps).
+
+Two layers:
+
+- **param checkpoints** (`save_checkpoint`/`restore_checkpoint`): one
+  pytree of arrays, restored into the structure of a template tree.
+
+- **session snapshots** (`save_snapshot`/`load_snapshot`): the full
+  crash-safe run state the `repro.api.Session` resume path needs —
+  arbitrary named arrays (stacked params, decision vectors, metric
+  history) plus a JSON-able meta dict (round, clock, RNG bit-generator
+  states, controller scalars).
+
+Both layers write atomically: every file lands under a ``.tmp`` name and
+is ``os.replace``d into place, and the ``.json`` sidecar — written
+*after* its ``.npz`` — is the commit marker.  A crash mid-write leaves
+either a stale tmp file or an npz with no sidecar; ``latest_step`` /
+``latest_snapshot`` skip both, so readers only ever see complete pairs.
+"""
 from __future__ import annotations
 
 import json
 import os
+import zipfile
 
 import jax
 import numpy as np
@@ -13,31 +32,143 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def as_leaf_dtype(arr: np.ndarray, dtype) -> np.ndarray:
+    """Restore a loaded array to a template leaf's dtype, bitwise.
+
+    ``np.load`` round-trips ml_dtypes leaves (bfloat16 and friends) as
+    raw void records (``|V2``); same-width voids are re-viewed by bit
+    pattern — exact — and anything else falls back to a cast.
+    """
+    dtype = np.dtype(dtype)
+    if arr.dtype == dtype:
+        return arr
+    if arr.dtype.kind == "V" and arr.dtype.itemsize == dtype.itemsize:
+        return arr.view(dtype)
+    return arr.astype(dtype)
+
+
+def _atomic_savez(path: str, arrays: dict) -> None:
+    tmp = path + ".tmp"
+    # write through a file object — np.savez would append ".npz" to a
+    # bare tmp filename and break the rename
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def _atomic_json(path: str, obj: dict) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)
+
+
+def _complete_steps(path: str, prefix: str):
+    """Steps under ``path`` whose ``{prefix}_{step}.npz`` is a readable
+    archive AND has its ``.json`` commit marker — half-written files
+    (crash mid-save, or a stale ``.tmp``) never count."""
+    if not os.path.isdir(path):
+        return []
+    steps = []
+    plen = len(prefix) + 1
+    for f in os.listdir(path):
+        if not (f.startswith(prefix + "_") and f.endswith(".npz")):
+            continue
+        try:
+            step = int(f[plen:-4])
+        except ValueError:
+            continue
+        npz = os.path.join(path, f)
+        marker = os.path.join(path, f"{prefix}_{step}.json")
+        if os.path.isfile(marker) and zipfile.is_zipfile(npz):
+            steps.append(step)
+    return steps
+
+
 def save_checkpoint(path: str, tree, step: int = 0) -> None:
     os.makedirs(path, exist_ok=True)
     leaves, treedef = _flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    np.savez(os.path.join(path, f"ckpt_{step}.npz"), **arrays)
-    with open(os.path.join(path, f"ckpt_{step}.json"), "w") as f:
-        json.dump({"treedef": str(treedef), "n_leaves": len(leaves),
-                   "step": step}, f)
+    _atomic_savez(os.path.join(path, f"ckpt_{step}.npz"), arrays)
+    _atomic_json(
+        os.path.join(path, f"ckpt_{step}.json"),
+        {"treedef": str(treedef), "n_leaves": len(leaves), "step": step})
 
 
 def latest_step(path: str):
-    if not os.path.isdir(path):
-        return None
-    steps = [int(f[5:-4]) for f in os.listdir(path)
-             if f.startswith("ckpt_") and f.endswith(".npz")]
+    steps = _complete_steps(path, "ckpt")
     return max(steps) if steps else None
 
 
 def restore_checkpoint(path: str, tree_like, step: int = None):
-    """Restore into the structure of ``tree_like``."""
+    """Restore into the structure of ``tree_like``.
+
+    Raises ``ValueError`` (not a downstream KeyError/shape blow-up) when
+    the checkpoint was written from a different tree structure: leaf
+    count or recorded treedef mismatch against the template.
+    """
     step = latest_step(path) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {path}")
     data = np.load(os.path.join(path, f"ckpt_{step}.npz"))
     leaves, treedef = _flatten(tree_like)
-    new_leaves = [data[f"leaf_{i}"].astype(np.asarray(l).dtype)
+    with open(os.path.join(path, f"ckpt_{step}.json")) as f:
+        meta = json.load(f)
+    if meta["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint step {step} has {meta['n_leaves']} leaves but the "
+            f"template tree has {len(leaves)} — not the same model")
+    if meta["treedef"] != str(treedef):
+        raise ValueError(
+            f"checkpoint step {step} treedef does not match the template "
+            f"tree:\n  saved:    {meta['treedef']}\n"
+            f"  template: {treedef}")
+    new_leaves = [as_leaf_dtype(data[f"leaf_{i}"], np.asarray(l).dtype)
                   for i, l in enumerate(leaves)]
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+# ---------------------------------------------------------------------------
+# Session snapshots (crash-safe resume — DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+SNAPSHOT_VERSION = 1
+
+
+def save_snapshot(path: str, step: int, arrays: dict, meta: dict) -> None:
+    """Write one complete run snapshot at ``step`` (atomic).
+
+    ``arrays``: named numpy arrays (params leaves, decisions, metric
+    history).  ``meta``: JSON-able scalars/structures (clock, RNG
+    states).  The meta sidecar commits the pair.
+    """
+    os.makedirs(path, exist_ok=True)
+    meta = dict(meta)
+    meta["snapshot_version"] = SNAPSHOT_VERSION
+    meta["step"] = step
+    _atomic_savez(
+        os.path.join(path, f"snap_{step}.npz"),
+        {k: np.asarray(v) for k, v in arrays.items()})
+    _atomic_json(os.path.join(path, f"snap_{step}.json"), meta)
+
+
+def latest_snapshot(path: str):
+    steps = _complete_steps(path, "snap")
+    return max(steps) if steps else None
+
+
+def load_snapshot(path: str, step: int = None):
+    """(arrays dict, meta dict) for ``step`` (default: latest complete)."""
+    step = latest_snapshot(path) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no snapshots under {path}")
+    with open(os.path.join(path, f"snap_{step}.json")) as f:
+        meta = json.load(f)
+    if meta.get("snapshot_version") != SNAPSHOT_VERSION:
+        raise ValueError(
+            f"snapshot step {step} has version "
+            f"{meta.get('snapshot_version')!r} != supported "
+            f"{SNAPSHOT_VERSION}")
+    with np.load(os.path.join(path, f"snap_{step}.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    return arrays, meta

@@ -1,0 +1,279 @@
+"""Fault-tolerant round semantics (DESIGN.md §12).
+
+Three layers under test:
+
+- the masked update rule (`split.hasfl_round_update` participation
+  vector): survivor-renormalized means, dropped clients holding params,
+  and the drop-everyone degenerate case — against hand-computed algebra
+  and the fused-kernel oracle;
+- the fault-aware latency accounting (`core.latency.masked_round` /
+  `deadline_round`): survivor-only straggler maxes, deadline-capped
+  barriers, and the factor→∞ soft-clock recovery — bitwise;
+- the three round engines under ``fault_mode="dropout"``: identical
+  clock streams (bitwise) and equivalent losses/params, extending the
+  tri-engine contract to partial rounds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, SFLConfig
+from repro.core import split as SP
+from repro.core.latency import LatencyModel, sample_devices
+from repro.core.profiles import model_profile
+from repro.core.sfl import SFLEdgeSimulator
+from repro.data import make_cifar_like, partition_iid, ClientSampler
+from repro.models import build_model
+
+TIGHT = dict(rtol=1e-5, atol=1e-6)
+GAMMA = 0.1
+
+
+def _toy(n=4, d=6, seed=0):
+    """One client-specific unit and one server-common unit, [N, d]."""
+    rng = np.random.default_rng(seed)
+    stacked = [
+        {"w": jnp.asarray(rng.normal(size=(n, d)), jnp.float32)}
+        for _ in range(2)
+    ]
+    grads = [
+        {"w": jnp.asarray(rng.normal(size=(n, d)), jnp.float32)}
+        for _ in range(2)
+    ]
+    masks = jnp.asarray([1.0, 0.0])      # unit 0 client-specific, 1 common
+    return stacked, grads, masks
+
+
+def _spec(p, g):
+    return np.asarray(p) - GAMMA * np.asarray(g)
+
+
+def _update(stacked, grads, masks, do_agg, part, impl=None):
+    out = SP.hasfl_round_update(
+        stacked, grads, masks, jnp.asarray(do_agg), GAMMA, impl=impl,
+        participation=None if part is None else jnp.asarray(part, jnp.float32))
+    return [np.asarray(u["w"]) for u in out]
+
+
+def test_drop_all_but_one_renormalizes_to_survivor():
+    stacked, grads, masks = _toy()
+    part = np.asarray([0, 1, 0, 0], np.float32)
+    spec = [_spec(u["w"], g["w"]) for u, g in zip(stacked, grads)]
+    out = _update(stacked, grads, masks, do_agg=False, part=part)
+    # server-common unit: the "mean" is the lone survivor's SGD result
+    np.testing.assert_allclose(
+        out[1], np.broadcast_to(spec[1][1], out[1].shape), **TIGHT)
+    # client-specific unit: survivor updates, dropped clients hold
+    np.testing.assert_array_equal(out[0][1], spec[0][1])
+    for i in (0, 2, 3):
+        np.testing.assert_array_equal(out[0][i], np.asarray(stacked[0]["w"])[i])
+
+
+def test_drop_everyone_holds_all_params():
+    stacked, grads, masks = _toy()
+    part = np.zeros(4, np.float32)
+    for do_agg in (False, True):
+        out = _update(stacked, grads, masks, do_agg, part)
+        for u in range(2):
+            np.testing.assert_array_equal(out[u], np.asarray(stacked[u]["w"]))
+
+
+def test_dropped_client_resyncs_on_aggregation_round():
+    """Non-agg round: dropped client-specific params are untouched.
+    Agg round: everyone (dropped included) receives the survivor mean —
+    the broadcast re-sync."""
+    stacked, grads, masks = _toy()
+    part = np.asarray([1, 1, 0, 1], np.float32)
+    spec = _spec(stacked[0]["w"], grads[0]["w"])
+    out_hold = _update(stacked, grads, masks, do_agg=False, part=part)
+    np.testing.assert_array_equal(out_hold[0][2], np.asarray(stacked[0]["w"])[2])
+    out_agg = _update(stacked, grads, masks, do_agg=True, part=part)
+    survivor_mean = spec[[0, 1, 3]].mean(axis=0)
+    np.testing.assert_allclose(
+        out_agg[0], np.broadcast_to(survivor_mean, out_agg[0].shape), **TIGHT)
+
+
+def test_full_participation_matches_none_path():
+    """participation=ones must agree with the historical None path (the
+    renormalized mean over everyone IS the mean) — up to reassociation,
+    since None keeps the legacy op order bit-for-bit."""
+    stacked, grads, masks = _toy()
+    ones = np.ones(4, np.float32)
+    for do_agg in (False, True):
+        a = _update(stacked, grads, masks, do_agg, ones)
+        b = _update(stacked, grads, masks, do_agg, None)
+        for u in range(2):
+            np.testing.assert_allclose(a[u], b[u], **TIGHT)
+
+
+def test_masked_update_kernel_ref_matches_inline_bitwise():
+    """The impl="ref" dispatch path must stay bitwise against the inline
+    oracle under a participation vector (same op sequence contract as
+    the full-cohort path).  Both sides jitted — that is how the engines
+    run them, and the contract XLA's fusion choices are stable under
+    (eager-vs-jit differs by FMA contraction, which is out of scope)."""
+    import functools
+
+    stacked, grads, masks = _toy()
+    part = jnp.asarray([1, 0, 1, 1], jnp.float32)
+
+    @functools.partial(jax.jit, static_argnames=("impl", "do_agg"))
+    def run(stacked, grads, part, impl, do_agg):
+        return SP.hasfl_round_update(
+            stacked, grads, masks, jnp.asarray(do_agg), GAMMA, impl=impl,
+            participation=part)
+
+    for do_agg in (False, True):
+        a = run(stacked, grads, part, None, do_agg)
+        b = run(stacked, grads, part, "ref", do_agg)
+        for u in range(2):
+            np.testing.assert_array_equal(np.asarray(a[u]["w"]),
+                                          np.asarray(b[u]["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Fault-aware latency accounting
+# ---------------------------------------------------------------------------
+
+
+def _lat(n=4, seed=0, slow=None):
+    devs = sample_devices(n, np.random.default_rng(seed))
+    if slow is not None:
+        import dataclasses
+        devs[slow] = dataclasses.replace(devs[slow], flops=devs[slow].flops / 50.0)
+    cfg = get_config("vgg9-cifar-small")
+    sfl = SFLConfig(n_devices=n, agg_interval=3, lr=0.05)
+    return LatencyModel(model_profile(cfg), devs, sfl)
+
+
+def test_masked_round_drops_straggler_terms():
+    lat = _lat(slow=0)
+    b = np.full(4, 8)
+    cuts = np.full(4, 3)
+    full_split, full_agg = lat.t_split(b, cuts), lat.t_agg(b, cuts)
+    part = np.asarray([False, True, True, True])
+    ts, ta = lat.masked_round(b, cuts, part)
+    assert ts < full_split          # the 50x-slow device no longer gates
+    assert ta <= full_agg
+    assert lat.masked_round(b, cuts, np.zeros(4, bool)) == (0.0, 0.0)
+
+
+def test_masked_round_full_mask_matches_soft_split_barrier():
+    """All participating: the Eq. 38 barrier terms are the same floats
+    the soft path sums (survivor max == global max, summed in the same
+    order)."""
+    lat = _lat()
+    b = np.full(4, 8)
+    cuts = np.full(4, 3)
+    ts, _ = lat.masked_round(b, cuts, np.ones(4, bool))
+    assert ts == lat.t_split(b, cuts)
+
+
+def test_deadline_round_factor_inf_recovers_soft_clock():
+    lat = _lat(slow=2)
+    b = np.full(4, 8)
+    cuts = np.full(4, 3)
+    part, ts, ta = lat.deadline_round(b, cuts, np.ones(4, bool), 1e12)
+    assert part.all()
+    assert ts == lat.t_split(b, cuts)
+    assert ta == lat.t_agg(b, cuts)
+
+
+def test_deadline_round_drops_straggler_and_caps_barrier():
+    lat = _lat(slow=0)
+    b = np.full(4, 8)
+    cuts = np.full(4, 3)
+    part, ts, _ = lat.deadline_round(b, cuts, np.ones(4, bool), 1.5)
+    assert not part[0] and part[1:].all()   # the slow device misses
+    assert ts < lat.t_split(b, cuts)        # clock advances at the deadline
+    # every client offline: timeless no-op
+    part0, ts0, ta0 = lat.deadline_round(b, cuts, np.zeros(4, bool), 1.5)
+    assert not part0.any() and ts0 == 0.0 and ta0 == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Tri-engine equivalence under dropout
+# ---------------------------------------------------------------------------
+
+
+def _make_sim(engine, fault_mode, n=4, agg=2):
+    cfg = get_config("vgg9-cifar-small")
+    model = build_model(cfg)
+    (xtr, ytr), (xte, yte) = make_cifar_like(10, 160, 40, 32, seed=3)
+    shards = partition_iid(len(ytr), n, np.random.default_rng(1))
+    sampler = ClientSampler({"images": xtr, "labels": ytr}, shards,
+                            np.random.default_rng(2))
+    sfl = SFLConfig(n_devices=n, agg_interval=agg, lr=0.05)
+    devs = sample_devices(n, np.random.default_rng(0))
+    prof = model_profile(cfg)
+    return SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
+                            devs, sfl, prof, seed=0, engine=engine,
+                            fault_mode=fault_mode)
+
+
+def test_tri_engine_equivalence_under_dropout():
+    """Static availability mask excluding one client: all three engines
+    must agree — clock bitwise (same host accounting), losses/params to
+    the usual engine tolerances — with the dropped client's
+    client-specific units held through non-agg rounds."""
+    def policy(s, rng):
+        return np.full(s.n, 8), np.full(s.n, 3)
+
+    avail = np.asarray([True, False, True, True])
+    res, sims = {}, {}
+    for eng in ("legacy", "vectorized", "scan"):
+        sim = _make_sim(eng, "dropout")
+        sim.set_devices(sim.devices, available=avail)
+        res[eng] = sim.run(policy, rounds=4, eval_every=2)
+        sims[eng] = sim
+
+    assert res["scan"].clock == res["vectorized"].clock == res["legacy"].clock
+    np.testing.assert_allclose(res["scan"].train_loss,
+                               res["vectorized"].train_loss, **TIGHT)
+    np.testing.assert_allclose(res["scan"].test_loss,
+                               res["vectorized"].test_loss, **TIGHT)
+    np.testing.assert_allclose(res["scan"].test_loss,
+                               res["legacy"].test_loss, rtol=2e-3, atol=2e-4)
+    for i in range(4):
+        for u_a, u_b in zip(sims["scan"].client_units[i],
+                            sims["vectorized"].client_units[i]):
+            for x, y in zip(jax.tree_util.tree_leaves(u_a),
+                            jax.tree_util.tree_leaves(u_b)):
+                np.testing.assert_allclose(np.asarray(x, np.float32),
+                                           np.asarray(y, np.float32), **TIGHT)
+
+
+def test_fault_mode_validation():
+    with pytest.raises(ValueError, match="fault_mode"):
+        _make_sim("vectorized", "brownout")
+    with pytest.raises(ValueError, match="deadline_factor"):
+        cfg = get_config("vgg9-cifar-small")
+        model = build_model(cfg)
+        (xtr, ytr), (xte, yte) = make_cifar_like(10, 40, 20, 32, seed=3)
+        shards = partition_iid(len(ytr), 2, np.random.default_rng(1))
+        sampler = ClientSampler({"images": xtr, "labels": ytr}, shards,
+                                np.random.default_rng(2))
+        SFLEdgeSimulator(
+            model, sampler, {"images": xte, "labels": yte},
+            sample_devices(2, np.random.default_rng(0)),
+            SFLConfig(n_devices=2), model_profile(cfg), engine="vectorized",
+            fault_mode="deadline", deadline_factor=0.0)
+
+
+def test_spec_fault_fields_and_grid_key():
+    from repro.api import ExperimentSpec
+
+    base = ExperimentSpec()
+    with pytest.raises(ValueError, match="fault_mode"):
+        base.replace(fault_mode="brownout").validated()
+    with pytest.raises(ValueError, match="deadline_factor"):
+        base.replace(deadline_factor=0.0).validated()
+    # fault semantics split grid groups; soft is the default key
+    assert base.grid_key() != base.replace(fault_mode="dropout").grid_key()
+    assert (base.replace(fault_mode="deadline", deadline_factor=1.5).grid_key()
+            != base.replace(fault_mode="deadline").grid_key())
+    # json round-trip carries the new fields
+    rt = ExperimentSpec.from_json(
+        base.replace(fault_mode="deadline", deadline_factor=3.0).to_json())
+    assert rt.fault_mode == "deadline" and rt.deadline_factor == 3.0

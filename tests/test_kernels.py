@@ -164,13 +164,39 @@ def test_clip_sgd_interpret_vs_ref():
     p = _rand(rng, (n, d), jnp.float32)
     g = _rand(rng, (n, d), jnp.float32)
     scale = jnp.asarray(rng.uniform(0.1, 1.0, (n,)), jnp.float32)
-    # keep_spec is the unit's traced membership-AND-not-aggregating flag
-    # (a scalar — membership is per *unit*, not per client)
-    for keep in (jnp.asarray(True), jnp.asarray(False)):
+    # keep_spec is per-client: the unit's membership-AND-not-aggregating
+    # flag ANDed with participation (all-equal when the cohort is full)
+    for keep in (jnp.ones((n,), bool), jnp.zeros((n,), bool)):
         out = ops.clip_sgd(p, g, scale, keep, gamma=0.05, impl="interpret")
         ref = REF.clip_sgd_ref(p, g, scale, keep, gamma=0.05)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=2e-6, atol=2e-6)
+
+
+def test_clip_sgd_participation_interpret_vs_ref():
+    """Kernel == oracle for every participation shape that matters:
+    partial survivors, one survivor, drop-everyone — on both the
+    client-specific (keep) and server-common (agg) sides."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(11)
+    n, d = 5, 260
+    p = _rand(rng, (n, d), jnp.float32)
+    g = _rand(rng, (n, d), jnp.float32)
+    scale = jnp.asarray(rng.uniform(0.1, 1.0, (n,)), jnp.float32)
+    parts = (
+        jnp.asarray([1, 0, 1, 1, 0], jnp.float32),
+        jnp.asarray([0, 0, 0, 1, 0], jnp.float32),
+        jnp.zeros((n,), jnp.float32),
+    )
+    for part in parts:
+        for spec_keep in (True, False):
+            keep = jnp.logical_and(
+                jnp.full((n,), spec_keep), part > 0)
+            out = ops.clip_sgd(p, g, scale, keep, part,
+                               gamma=0.05, impl="interpret")
+            ref = REF.clip_sgd_ref(p, g, scale, keep, part, gamma=0.05)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-6, atol=2e-6)
 
 
 def test_ops_dispatch_rejects_unknown_impl():

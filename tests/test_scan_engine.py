@@ -21,7 +21,7 @@ from repro.models import build_model
 TIGHT = dict(rtol=1e-5, atol=1e-6)
 
 
-def _make_sim(engine, n=4, agg=3, seed_data=3):
+def _make_sim(engine, n=4, agg=3, seed_data=3, **kw):
     cfg = get_config("vgg9-cifar-small")
     model = build_model(cfg)
     (xtr, ytr), (xte, yte) = make_cifar_like(10, 240, 60, 32, seed=seed_data)
@@ -32,7 +32,7 @@ def _make_sim(engine, n=4, agg=3, seed_data=3):
     devs = sample_devices(n, np.random.default_rng(0))
     prof = model_profile(cfg)
     return SFLEdgeSimulator(model, sampler, {"images": xte, "labels": yte},
-                            devs, sfl, prof, seed=0, engine=engine)
+                            devs, sfl, prof, seed=0, engine=engine, **kw)
 
 
 def _assert_param_close(sim_a, sim_b):
@@ -148,6 +148,36 @@ def test_scan_matches_legacy_loop():
     np.testing.assert_allclose(res["scan"].test_loss,
                                res["legacy"].test_loss, rtol=2e-3,
                                atol=2e-4)
+
+
+def test_tri_engine_equivalence_under_fault_scenario():
+    """The engine contract extended to fault-aware rounds (DESIGN.md
+    §12): a churn scenario driving ``fault_mode="deadline"`` — per-round
+    participation masks, survivor-renormalized updates, deadline-capped
+    clock — must leave all three engines equivalent: clock bitwise (the
+    accounting is host-side in every engine), losses/params to the usual
+    engine tolerances."""
+    from repro.scenarios import make_scenario
+
+    def policy(s, rng):
+        return np.full(s.n, 8), np.full(s.n, 3)
+
+    res, sims = {}, {}
+    for eng in ("legacy", "vectorized", "scan"):
+        sim = _make_sim(eng, agg=2, fault_mode="deadline",
+                        deadline_factor=1.5)
+        scen = make_scenario("churn-heavy", sim.devices, seed=5)
+        res[eng] = sim.run(policy, rounds=6, eval_every=2, scenario=scen)
+        sims[eng] = sim
+
+    assert res["scan"].clock == res["vectorized"].clock == res["legacy"].clock
+    np.testing.assert_allclose(res["scan"].train_loss,
+                               res["vectorized"].train_loss, **TIGHT)
+    np.testing.assert_allclose(res["scan"].test_loss,
+                               res["vectorized"].test_loss, **TIGHT)
+    np.testing.assert_allclose(res["scan"].test_loss,
+                               res["legacy"].test_loss, rtol=2e-3, atol=2e-4)
+    _assert_param_close(sims["scan"], sims["vectorized"])
 
 
 def test_pow2_bucketing_bounds_executables():
