@@ -94,14 +94,19 @@ def full_profile(arch: str = "vgg16-cifar"):
 def make_spec(
     *, n_clients=8, iid=False, agg_interval=15, lr=0.05,
     n_train=1200, n_test=300, seed=0, arch="vgg9-cifar-small",
-    engine=None, **overrides
+    engine=None, sfl_overrides=None, **overrides
 ) -> ExperimentSpec:
-    """The benchmark harness's historical `make_sim` wiring, as a spec."""
+    """The benchmark harness's historical `make_sim` wiring, as a spec.
+
+    ``sfl_overrides`` reaches the remaining `SFLConfig` knobs (server
+    resources, clip, priors) the figure sweeps scale — e.g. the fig7b
+    ``server_flops`` axis."""
     return ExperimentSpec(
         arch=arch, n_clients=n_clients,
         partition="iid" if iid else "noniid-shards",
         n_train=n_train, n_test=n_test, seed=seed, engine=engine,
-        sfl=SFLConfig(n_devices=n_clients, agg_interval=agg_interval, lr=lr),
+        sfl=SFLConfig(n_devices=n_clients, agg_interval=agg_interval,
+                      lr=lr, **(sfl_overrides or {})),
         **overrides)
 
 
@@ -129,6 +134,74 @@ def make_sim(
         )
     )
     return sess.sim, sess.optimizer
+
+
+def run_spec_grid(figure, specs, *, runner="auto", out_dir=None):
+    """Dispatch one figure's spec grid; returns ``(results, wall_s)``.
+
+    The single entry point every figure driver funnels through (the
+    one-command reproduction, DESIGN.md §13): compatible cells —
+    policies x scenarios x *seeds*, since `grid_key` no longer pins the
+    seed — batch into vmapped mega-runs per `Session.run_grid`, and the
+    exact specs are committed next to the CSV as
+    ``<out_dir>/<figure>.specs.json`` so the figure replays bit-for-bit.
+    """
+    from repro.api import Session, save_specs
+
+    out_dir = out_dir or OUT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    results = Session.run_grid(specs, runner=runner)
+    wall = time.time() - t0
+    save_specs(os.path.join(out_dir, f"{figure}.specs.json"), specs)
+    print(
+        f"[{figure}] {len(specs)} cells via runner={runner} "
+        f"in {wall:.1f}s", flush=True
+    )
+    return results, wall
+
+
+def seed_curve_rows(series, results_by_seed, cols):
+    """Eval-trajectory CSV rows for one series: per-seed + mean.
+
+    ``series`` is the row's leading label columns (list), ``cols`` the
+    `SimResult` attribute names to emit.  Every seed's cells share the
+    eval schedule (same spec rounds/eval_every), so the mean curve is
+    the elementwise mean — the figure's plotted line; per-seed rows stay
+    in the CSV for error bands.
+    """
+    import numpy as np
+
+    series = list(series)
+    seeds = sorted(results_by_seed)
+    results = [results_by_seed[s] for s in seeds]
+    rounds = results[0].rounds
+    for r in results[1:]:
+        if r.rounds != rounds:
+            raise ValueError("seed cells must share the eval schedule")
+    rows = []
+    for s, r in zip(seeds, results):
+        for k, t in enumerate(rounds):
+            rows.append(series + [s, t] + [getattr(r, c)[k] for c in cols])
+    means = [np.mean([getattr(r, c) for r in results], axis=0) for c in cols]
+    for k, t in enumerate(rounds):
+        rows.append(series + ["mean", t] + [float(m[k]) for m in means])
+    return rows
+
+
+def seed_summary_rows(series, results_by_seed, fns):
+    """Scalar-summary CSV rows for one series: per-seed + mean.
+
+    ``fns``: list of ``SimResult -> float`` extractors (final acc,
+    converged time, ...)."""
+    import numpy as np
+
+    series = list(series)
+    seeds = sorted(results_by_seed)
+    vals = [[fn(results_by_seed[s]) for fn in fns] for s in seeds]
+    rows = [series + [s] + v for s, v in zip(seeds, vals)]
+    rows.append(series + ["mean"] + [float(x) for x in np.mean(vals, 0)])
+    return rows
 
 
 def run_policy(sim, opt, name, rounds, eval_every=10):
@@ -208,6 +281,39 @@ def runner_id() -> str:
     fp = hashlib.sha1(f"{cpu}|{os.cpu_count()}".encode()).hexdigest()[:8]
     host = socket.gethostname().split(".")[0].replace(",", "_")
     return f"{host}-{fp}"
+
+
+# The sim_speed.csv trajectory schema (owned here so both the engine
+# micro-benchmark and the figure lane append compatible rows).  The
+# PR-8 ``figure``/``wall_s`` columns go LAST — pre-existing rows are
+# prefix-migrated (padded empty) by append_csv: engine rows leave them
+# empty, figure-lane rows leave the engine ms/ratio columns empty, and
+# the perf gate treats ``wall_s`` as warn-only (figure walls swing with
+# cell counts and CI tenancy; the hard gate stays on the engine ratios).
+SIM_SPEED_HEADER = [
+    "config", "n_clients", "loop_ms", "vectorized_ms", "scan_ms",
+    "vec_speedup", "scan_speedup", "git_sha", "timestamp",
+    "runner_id", "harness", "figure", "wall_s"
+]
+
+
+def record_figure_walls(walls, *, quick=False, out_dir=None) -> None:
+    """Append figure-lane wall-time rows to the sim_speed trajectory.
+
+    ``walls``: list of ``(figure, wall_s)``.  Rows carry the same
+    git_sha/runner_id/harness provenance as the engine rows and key as
+    ``config=fig-<name>[-quick]`` so quick (CI) and full walls never
+    compare against each other.
+    """
+    out = os.path.join(out_dir or OUT_DIR, "sim_speed.csv")
+    sha, ts, rid = git_sha(), now_iso(), runner_id()
+    suffix = "-quick" if quick else ""
+    rows = [
+        [f"fig-{name}{suffix}", "", "", "", "", "", "",
+         sha, ts, rid, HARNESS, name, round(wall, 1)]
+        for name, wall in walls
+    ]
+    append_csv(out, SIM_SPEED_HEADER, rows)
 
 
 def append_csv(path: str, header: list, rows: list) -> None:

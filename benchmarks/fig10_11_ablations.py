@@ -1,63 +1,85 @@
 """Figs. 10-11 — ablations.
 
-Fig 10: HABS vs fixed batch sizes (b = 8, 16, 32), L_c = 8.
+Fig 10: HABS vs fixed batch sizes (b = 8, 16, 32), L_c = 4.
 Fig 11: HAMS vs fixed split points (L_c = 2, 4, 6), b = 16.
-Both under IID and non-IID.
+Both under IID and non-IID, each as one scheme x partition x seed
+`ExperimentSpec` grid (parameterized `fixed(...)` / `fixed-ms` /
+`fixed-bs` policy strings pin exactly the ablated knob) dispatched
+through `Session.run_grid`, summarized as mean over seeds.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import make_sim, emit, save_csv, OUT_DIR
-from repro.core import baselines
+from benchmarks.common import (
+    make_spec, emit, save_csv, seed_summary_rows, run_spec_grid, OUT_DIR
+)
+
+BASE_SEED = 2
+L_C10 = 4
+B11 = 16
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
+    out_dir = out_dir or OUT_DIR
     rounds = 30 if quick else 60
     n_clients = 4 if quick else 6
+    seed_list = [BASE_SEED + j for j in range(seeds)]
+    # fig10 ablates b with the cut pinned (habs = "fixed-ms(cut=4)": HABS
+    # batches, fixed split); fig11 ablates the cut with b pinned (hams =
+    # "fixed-bs(b=16)": fixed batch, HAMS splits)
+    bs10 = (8, 16) if quick else (8, 16, 32)
+    cuts11 = (2, 6) if quick else (2, 4, 6)
+    schemes = [
+        ("fig10", "habs", f"fixed-ms(cut={L_C10})"),
+        *[("fig10", f"fixed_b{b}", f"fixed(b={b},cut={L_C10})")
+          for b in bs10],
+        ("fig11", "hams", f"fixed-bs(b={B11})"),
+        *[("fig11", f"fixed_Lc{c}", f"fixed(b={B11},cut={c})")
+          for c in cuts11],
+    ]
+    cells = [
+        (iid, fig, name, pol, s)
+        for iid in (True, False)
+        for fig, name, pol in schemes
+        for s in seed_list
+    ]
+    specs = [
+        make_spec(
+            n_clients=n_clients, iid=iid, agg_interval=15, seed=s,
+            policy=pol, estimate=False,
+            rounds=rounds, eval_every=max(5, rounds // 8),
+        )
+        for iid, fig, name, pol, s in cells
+    ]
+    results, wall = run_spec_grid(
+        "fig10_11", specs, runner=runner, out_dir=out_dir
+    )
+    by_series = {}
+    for (iid, fig, name, pol, s), res in zip(cells, results):
+        by_series.setdefault((fig, iid, name), {})[s] = res
     rows = []
-    for iid in (True, False):
+    for (fig, iid, name), by_seed in by_series.items():
         tag = "iid" if iid else "noniid"
-        # ---- Fig 10: BS ablation (cuts fixed) --------------------------
-        for scheme in (["habs", 8, 16] if quick else ["habs", 8, 16, 32]):
-            sim, opt = make_sim(n_clients=n_clients, iid=iid, seed=2)
-            l_c = 4
-
-            def policy(s, rng, _s=scheme):
-                cuts = np.full(s.n, l_c)
-                if _s == "habs":
-                    return baselines.habs(opt, cuts), cuts
-                return np.full(s.n, int(_s)), cuts
-
-            res = sim.run(policy, rounds=rounds, eval_every=max(5, rounds // 8))
-            name = scheme if scheme == "habs" else f"fixed_b{scheme}"
-            emit(
-                f"fig10_{tag}_{name}", 0.0,
-                f"final_acc={res.test_acc[-1]:.4f};"
-                f"converged_time={res.converged_time():.2f}s"
-            )
-            rows.append(["fig10", tag, name, res.test_acc[-1], res.converged_time()])
-        # ---- Fig 11: MS ablation (b fixed = 16) ------------------------
-        for scheme in (["hams", 2, 6] if quick else ["hams", 2, 4, 6]):
-            sim, opt = make_sim(n_clients=n_clients, iid=iid, seed=2)
-
-            def policy(s, rng, _s=scheme):
-                b = np.full(s.n, 16)
-                if _s == "hams":
-                    return b, baselines.hams(opt, b)
-                return b, np.full(s.n, int(_s))
-
-            res = sim.run(policy, rounds=rounds, eval_every=max(5, rounds // 8))
-            name = scheme if scheme == "hams" else f"fixed_Lc{scheme}"
-            emit(
-                f"fig11_{tag}_{name}", 0.0,
-                f"final_acc={res.test_acc[-1]:.4f};"
-                f"converged_time={res.converged_time():.2f}s"
-            )
-            rows.append(["fig11", tag, name, res.test_acc[-1], res.converged_time()])
+        rows += seed_summary_rows(
+            [fig, tag, name], by_seed,
+            [lambda r: r.test_acc[-1], lambda r: r.converged_time()],
+        )
+        mean_acc = float(np.mean([r.test_acc[-1] for r in by_seed.values()]))
+        mean_ct = float(
+            np.mean([r.converged_time() for r in by_seed.values()])
+        )
+        emit(
+            f"{fig}_{tag}_{name}", wall / len(specs) / rounds * 1e6,
+            f"mean_final_acc={mean_acc:.4f};"
+            f"mean_converged_time={mean_ct:.2f}s;seeds={len(seed_list)}"
+        )
     save_csv(
-        f"{OUT_DIR}/fig10_11.csv",
-        ["figure", "setting", "scheme", "final_acc", "converged_time_s"], rows
+        f"{out_dir}/fig10_11.csv",
+        [
+            "figure", "setting", "scheme", "seed", "final_acc",
+            "converged_time_s"
+        ], rows
     )
 
 

@@ -1,42 +1,63 @@
 """Fig. 2 — impact of batch size on convergence and per-round latency.
 
 (a) test accuracy vs rounds for fixed b in {8, 16, 32} (reduced model,
-    non-IID, L_c = 8, I = 15 — the paper's setting);
+    non-IID, L_c = 4, I = 15 — the paper's setting), run as one
+    b x seed `ExperimentSpec` grid through `Session.run_grid` and
+    reported as mean-over-seeds curves (per-seed rows kept for error
+    bands);
 (b) per-round training latency vs b on the FULL VGG-16 profile (analytic,
     exactly Eqns 28-40).
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import (make_sim, full_profile, emit, save_csv, OUT_DIR)
+from benchmarks.common import (
+    make_spec, full_profile, emit, save_csv, seed_curve_rows,
+    run_spec_grid, OUT_DIR
+)
 from repro.config import SFLConfig
 from repro.core.latency import LatencyModel, sample_devices
 
+BS = (8, 16, 32)
+L_C = 4
 
-def main(quick: bool = False):
+
+def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
+    out_dir = out_dir or OUT_DIR
     rounds = 30 if quick else 60
-    rows = []
-    # (a) accuracy vs rounds for fixed batch sizes
-    for b in (8, 16, 32):
-        sim, opt = make_sim(n_clients=4 if quick else 8, iid=False, agg_interval=15)
-        l_c = 4
-
-        def policy(s, rng, _b=b):
-            return np.full(s.n, _b), np.full(s.n, l_c)
-
-        t0 = time.time()
-        res = sim.run(policy, rounds=rounds, eval_every=max(5, rounds // 8))
-        us = (time.time() - t0) / rounds * 1e6
-        emit(
-            f"fig2a_acc_b{b}", us,
-            f"final_acc={res.test_acc[-1]:.4f};clock={res.clock[-1]:.2f}s"
+    n_clients = 4 if quick else 8
+    seed_list = list(range(seeds))
+    # (a) accuracy vs rounds for fixed batch sizes — one spec grid; the
+    # policy string pins each cell's uniform (b, cut), the seed axis
+    # stacks into the same vmapped group (grid_key is seed-free)
+    specs = [
+        make_spec(
+            n_clients=n_clients, iid=False, agg_interval=15, seed=s,
+            policy=f"fixed(b={b},cut={L_C})", estimate=False,
+            rounds=rounds, eval_every=max(5, rounds // 8),
         )
-        for r, a, c in zip(res.rounds, res.test_acc, res.clock):
-            rows.append([f"b={b}", r, a, c])
-    save_csv(f"{OUT_DIR}/fig2a.csv", ["series", "round", "acc", "clock"], rows)
+        for b in BS for s in seed_list
+    ]
+    results, wall = run_spec_grid(
+        "fig2a", specs, runner=runner, out_dir=out_dir
+    )
+    rows = []
+    for i, b in enumerate(BS):
+        by_seed = {
+            s: results[i * len(seed_list) + j]
+            for j, s in enumerate(seed_list)
+        }
+        rows += seed_curve_rows([f"b={b}"], by_seed, ["test_acc", "clock"])
+        mean_acc = float(np.mean([r.test_acc[-1] for r in by_seed.values()]))
+        emit(
+            f"fig2a_acc_b{b}", wall / len(specs) / rounds * 1e6,
+            f"mean_final_acc={mean_acc:.4f};seeds={len(seed_list)}"
+        )
+    save_csv(
+        f"{out_dir}/fig2a.csv",
+        ["series", "seed", "round", "acc", "clock"], rows
+    )
 
     # (b) per-round latency vs b — full VGG-16 profile, Table-I devices
     prof = full_profile("vgg16-cifar")
@@ -48,7 +69,7 @@ def main(quick: bool = False):
         t = lat.t_split(np.full(20, b), np.full(20, 8))
         rows_b.append([b, t])
         emit(f"fig2b_latency_b{b}", t * 1e6, f"t_split={t:.4f}s")
-    save_csv(f"{OUT_DIR}/fig2b.csv", ["b", "t_split_s"], rows_b)
+    save_csv(f"{out_dir}/fig2b.csv", ["b", "t_split_s"], rows_b)
 
 
 if __name__ == "__main__":

@@ -2,28 +2,38 @@
 
 (b) per-cut computing and communication overhead of SFL on the FULL
     VGG-16 profile (exact per-layer rho/psi/delta arrays);
-(a) test accuracy vs rounds for different L_c (reduced model).
+(a) test accuracy vs rounds for different L_c (reduced model), run as
+    one L_c x seed spec grid through `Session.run_grid` with
+    mean-over-seeds curves.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import make_sim, full_profile, emit, save_csv, OUT_DIR
+from benchmarks.common import (
+    make_spec, full_profile, emit, save_csv, seed_curve_rows,
+    run_spec_grid, OUT_DIR
+)
+
+CUTS = (2, 4, 6)
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
+    out_dir = out_dir or OUT_DIR
     # (b) analytic overheads per split point — the paper's trade-off plot
     prof = full_profile("vgg16-cifar")
     rows = []
     for j in range(1, prof.n_layers + 1):
         client_flops = prof.rho[j - 1] + prof.bwd[j - 1]
-        server_flops = (prof.rho[-1] - prof.rho[j - 1] + prof.bwd[-1] - prof.bwd[j - 1])
+        server_flops = (
+            prof.rho[-1] - prof.rho[j - 1] + prof.bwd[-1] - prof.bwd[j - 1]
+        )
         comm_bits = prof.psi[j - 1] + prof.chi[j - 1]
-        rows.append([j, client_flops, server_flops, comm_bits, prof.delta[j - 1]])
+        rows.append(
+            [j, client_flops, server_flops, comm_bits, prof.delta[j - 1]]
+        )
     save_csv(
-        f"{OUT_DIR}/fig3b.csv",
+        f"{out_dir}/fig3b.csv",
         [
             "cut", "client_flops", "server_flops", "act_bits_per_sample",
             "submodel_bits"
@@ -31,22 +41,37 @@ def main(quick: bool = False):
     )
     emit("fig3b_overheads", 0.0, f"cuts={prof.n_layers}")
 
-    # (a) accuracy vs rounds for different cut depths (b=16, I=15)
+    # (a) accuracy vs rounds for different cut depths (b=16, I=15) — one
+    # L_c x seed spec grid (the b=16 default is baselines.FIXED_B)
     rounds = 30 if quick else 60
+    n_clients = 4 if quick else 8
+    seed_list = list(range(seeds))
+    specs = [
+        make_spec(
+            n_clients=n_clients, iid=False, agg_interval=15, seed=s,
+            policy=f"fixed(cut={l_c})", estimate=False,
+            rounds=rounds, eval_every=max(5, rounds // 8),
+        )
+        for l_c in CUTS for s in seed_list
+    ]
+    results, wall = run_spec_grid(
+        "fig3a", specs, runner=runner, out_dir=out_dir
+    )
     rows_a = []
-    for l_c in (2, 4, 6):
-        sim, opt = make_sim(n_clients=4 if quick else 8, iid=False, agg_interval=15)
-
-        def policy(s, rng, _c=l_c):
-            return np.full(s.n, 16), np.full(s.n, _c)
-
-        t0 = time.time()
-        res = sim.run(policy, rounds=rounds, eval_every=max(5, rounds // 8))
-        us = (time.time() - t0) / rounds * 1e6
-        emit(f"fig3a_acc_Lc{l_c}", us, f"final_acc={res.test_acc[-1]:.4f}")
-        for r, a in zip(res.rounds, res.test_acc):
-            rows_a.append([f"Lc={l_c}", r, a])
-    save_csv(f"{OUT_DIR}/fig3a.csv", ["series", "round", "acc"], rows_a)
+    for i, l_c in enumerate(CUTS):
+        by_seed = {
+            s: results[i * len(seed_list) + j]
+            for j, s in enumerate(seed_list)
+        }
+        rows_a += seed_curve_rows([f"Lc={l_c}"], by_seed, ["test_acc"])
+        mean_acc = float(np.mean([r.test_acc[-1] for r in by_seed.values()]))
+        emit(
+            f"fig3a_acc_Lc{l_c}", wall / len(specs) / rounds * 1e6,
+            f"mean_final_acc={mean_acc:.4f};seeds={len(seed_list)}"
+        )
+    save_csv(
+        f"{out_dir}/fig3a.csv", ["series", "seed", "round", "acc"], rows_a
+    )
 
 
 if __name__ == "__main__":

@@ -1,44 +1,82 @@
 """Figs. 5-6 — HASFL vs the four benchmarks: training curves, converged
-accuracy and converged (simulated) time, IID + non-IID."""
+accuracy and converged (simulated) time, IID + non-IID.
+
+One policy x partition x seed `ExperimentSpec` grid: the partition and
+seed axes are grid-free (DESIGN.md §13), so every cell lands in a single
+`Session.run_grid` group and the CSVs carry mean-over-seeds curves with
+per-seed rows for error bands.
+"""
 from __future__ import annotations
 
+import numpy as np
+
+from benchmarks.common import (
+    make_spec, emit, save_csv, seed_curve_rows, seed_summary_rows,
+    run_spec_grid, POLICIES, OUT_DIR
+)
+
+BASE_SEED = 1
 
 
-from benchmarks.common import (make_sim, run_policy, emit, save_csv, POLICIES, OUT_DIR)
-
-
-def main(quick: bool = False):
+def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
+    out_dir = out_dir or OUT_DIR
     rounds = 40 if quick else 70
     n_clients = 4 if quick else 6
-    rows = []
-    summary = []
-    for iid in (True, False):
+    policies = ["hasfl", "rbs+rms"] if quick else list(POLICIES)
+    seed_list = [BASE_SEED + j for j in range(seeds)]
+    cells = [
+        (iid, name, s)
+        for iid in (True, False)
+        for name in policies
+        for s in seed_list
+    ]
+    specs = [
+        make_spec(
+            n_clients=n_clients, iid=iid, agg_interval=15, seed=s,
+            policy=name, estimate=False,
+            rounds=rounds, eval_every=max(5, rounds // 10),
+        )
+        for iid, name, s in cells
+    ]
+    results, wall = run_spec_grid(
+        "fig5_6", specs, runner=runner, out_dir=out_dir
+    )
+    by_series = {}
+    for (iid, name, s), res in zip(cells, results):
+        by_series.setdefault((iid, name), {})[s] = res
+    rows, summary = [], []
+    for (iid, name), by_seed in by_series.items():
         tag = "iid" if iid else "noniid"
-        for name in (POLICIES if not quick else POLICIES[:4:3] + ["rbs+rms"]):
-            sim, opt = make_sim(n_clients=n_clients, iid=iid, agg_interval=15, seed=1)
-            res, wall = run_policy(
-                sim, opt, name, rounds,
-                eval_every=max(5, rounds // 10)
-            )
-            emit(
-                f"fig5_{tag}_{name}", wall / rounds * 1e6,
-                f"final_acc={res.test_acc[-1]:.4f};"
-                f"converged_time={res.converged_time():.2f}s;"
-                f"clock={res.clock[-1]:.2f}s"
-            )
-            for r, a, c in zip(res.rounds, res.test_acc, res.clock):
-                rows.append([tag, name, r, a, c])
-            summary.append([
-                tag, name, res.test_acc[-1],
-                res.converged_time(), res.clock[-1]
-            ])
+        rows += seed_curve_rows(
+            [tag, name], by_seed, ["test_acc", "clock"]
+        )
+        summary += seed_summary_rows(
+            [tag, name], by_seed,
+            [
+                lambda r: r.test_acc[-1],
+                lambda r: r.converged_time(),
+                lambda r: r.clock[-1],
+            ],
+        )
+        mean_acc = float(np.mean([r.test_acc[-1] for r in by_seed.values()]))
+        mean_ct = float(
+            np.mean([r.converged_time() for r in by_seed.values()])
+        )
+        emit(
+            f"fig5_{tag}_{name}", wall / len(specs) / rounds * 1e6,
+            f"mean_final_acc={mean_acc:.4f};"
+            f"mean_converged_time={mean_ct:.2f}s;seeds={len(seed_list)}"
+        )
     save_csv(
-        f"{OUT_DIR}/fig5_curves.csv",
-        ["setting", "policy", "round", "acc", "clock"], rows
+        f"{out_dir}/fig5_curves.csv",
+        ["setting", "policy", "seed", "round", "acc", "clock"], rows
     )
     save_csv(
-        f"{OUT_DIR}/fig6_summary.csv",
-        ["setting", "policy", "final_acc", "converged_time_s", "total_clock_s"], summary
+        f"{out_dir}/fig6_summary.csv",
+        [
+            "setting", "policy", "seed", "final_acc",
+            "converged_time_s", "total_clock_s"
+        ], summary
     )
 
 

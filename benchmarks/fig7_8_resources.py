@@ -1,16 +1,20 @@
 """Figs. 7-8 — converged time vs network computing/communication resources.
 
-Uses the BCD objective Theta (estimated total latency to convergence,
-Corollary 1 x Eqn 40) on the FULL VGG-16 profile — the same quantity the
-paper plots, without re-training per point.
+(analytic) the BCD objective Theta (estimated total latency to
+convergence, Corollary 1 x Eqn 40) on the FULL VGG-16 profile — the same
+quantity the paper plots, without re-training per point;
+(sim) ``fig7b_sim.csv``: a simulated server-compute-scaling companion —
+the ``sfl_overrides={"server_flops": ...}`` axis changes the resolved
+`SFLConfig`, so each scale forms its own `Session.run_grid` group and
+policies x seeds stack within it.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (
-    full_profile, emit, save_csv, POLICIES,
-    OUT_DIR, robust_theta
+    make_spec, full_profile, emit, save_csv, seed_summary_rows,
+    run_spec_grid, POLICIES, OUT_DIR, robust_theta
 )
 from repro.config import SFLConfig
 from repro.core.bcd import HASFLOptimizer
@@ -18,12 +22,16 @@ from repro.core import baselines
 from repro.core.latency import sample_devices
 
 
+SIM_POLICIES = ("hasfl", "rbs+rms")
+
+
 def theta_for(opt, name, rng):
     b, cuts = baselines.policy(name, opt, rng)
     return robust_theta(opt, b, cuts)
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
+    out_dir = out_dir or OUT_DIR
     prof = full_profile("vgg16-cifar")
     sfl = SFLConfig()
     rng = np.random.default_rng(0)
@@ -41,9 +49,13 @@ def main(quick: bool = False):
     # Fig 7b: scale server compute f_s
     for scale in (0.5, 1.0, 2.0, 4.0):
         devs = sample_devices(20, np.random.default_rng(1))
-        opt = HASFLOptimizer(prof, devs, SFLConfig(server_flops=20e12 * scale))
+        opt = HASFLOptimizer(
+            prof, devs, SFLConfig(server_flops=20e12 * scale)
+        )
         for name in POLICIES:
-            rows.append(["fig7b_server", scale, name, theta_for(opt, name, rng)])
+            rows.append(
+                ["fig7b_server", scale, name, theta_for(opt, name, rng)]
+            )
     # Fig 8a: scale device uplink
     for scale in (0.5, 0.75, 1.0, 1.5, 2.0):
         devs = sample_devices(
@@ -52,20 +64,73 @@ def main(quick: bool = False):
         )
         opt = HASFLOptimizer(prof, devs, sfl)
         for name in POLICIES:
-            rows.append(["fig8a_uplink", scale, name, theta_for(opt, name, rng)])
+            rows.append(
+                ["fig8a_uplink", scale, name, theta_for(opt, name, rng)]
+            )
     # Fig 8b: scale inter-server rate
     for scale in (0.25, 0.5, 1.0, 2.0):
         devs = sample_devices(20, np.random.default_rng(1))
-        opt = HASFLOptimizer(prof, devs, SFLConfig(server_fed_bw=370e6 * scale))
+        opt = HASFLOptimizer(
+            prof, devs, SFLConfig(server_fed_bw=370e6 * scale)
+        )
         for name in POLICIES:
-            rows.append(["fig8b_interserver", scale, name, theta_for(opt, name, rng)])
-    save_csv(f"{OUT_DIR}/fig7_8.csv", ["sweep", "scale", "policy", "theta_s"], rows)
+            rows.append(
+                ["fig8b_interserver", scale, name, theta_for(opt, name, rng)]
+            )
+    save_csv(
+        f"{out_dir}/fig7_8.csv",
+        ["sweep", "scale", "policy", "theta_s"], rows
+    )
     # headline: HASFL robustness = ratio of its worst/best theta
     h = [r[3] for r in rows if r[2] == "hasfl" and r[0] == "fig7a_flops"]
     r_ = [r[3] for r in rows if r[2] == "rbs+rms" and r[0] == "fig7a_flops"]
     emit(
         "fig7_robustness", 0.0,
         f"hasfl_spread={max(h)/min(h):.2f};rbsrms_spread={max(r_)/min(r_):.2f}"
+    )
+
+    # simulated fig7b companion: converged time from real training runs
+    # under scaled server compute (per-scale SFLConfig -> per-scale group)
+    rounds = 30 if quick else 60
+    n_clients = 4 if quick else 6
+    scales = (0.5, 2.0) if quick else (0.5, 1.0, 2.0, 4.0)
+    seed_list = list(range(seeds))
+    cells = [
+        (scale, name, s)
+        for scale in scales for name in SIM_POLICIES for s in seed_list
+    ]
+    specs = [
+        make_spec(
+            n_clients=n_clients, iid=False, agg_interval=15, seed=s,
+            policy=name, estimate=False,
+            sfl_overrides={"server_flops": 20e12 * scale},
+            rounds=rounds, eval_every=max(5, rounds // 8),
+        )
+        for scale, name, s in cells
+    ]
+    results, wall = run_spec_grid(
+        "fig7b_sim", specs, runner=runner, out_dir=out_dir
+    )
+    by_series = {}
+    for (scale, name, s), res in zip(cells, results):
+        by_series.setdefault((scale, name), {})[s] = res
+    rows_sim = []
+    for (scale, name), by_seed in by_series.items():
+        rows_sim += seed_summary_rows(
+            [scale, name], by_seed,
+            [lambda r: r.converged_time(), lambda r: r.test_acc[-1]],
+        )
+        mean_ct = float(
+            np.mean([r.converged_time() for r in by_seed.values()])
+        )
+        emit(
+            f"fig7b_sim_x{scale}_{name}", wall / len(specs) / rounds * 1e6,
+            f"mean_converged_time={mean_ct:.2f}s;seeds={len(seed_list)}"
+        )
+    save_csv(
+        f"{out_dir}/fig7b_sim.csv",
+        ["server_scale", "policy", "seed", "converged_time_s", "final_acc"],
+        rows_sim
     )
 
 

@@ -1,6 +1,11 @@
 """Roofline table (deliverable g): read the dry-run JSONs and print the
 per-(arch x shape) three-term roofline with bottleneck + useful-FLOPs
 fraction.  Run `python -m repro.launch.dryrun --all` first.
+
+Also emits ``roofline_sim.csv`` — measured per-round wall time from tiny
+sim-backed cells (one arch x seed spec grid per family through
+`Session.run_grid`), grounding the analytic table's compute terms in
+runnable numbers on both the conv and token paths.
 """
 from __future__ import annotations
 
@@ -8,7 +13,9 @@ import glob
 import json
 import os
 
-from benchmarks.common import emit
+from benchmarks.common import (
+    make_spec, emit, save_csv, run_spec_grid, OUT_DIR
+)
 
 DRYRUN_DIR = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
 
@@ -23,6 +30,14 @@ def load_records(mesh: str = "single") -> list:
 
 CHIPS = 256
 PEAK = 197e12
+
+# tiny sim-backed cells: (arch, extra spec overrides); smollm-tiny has 2
+# blocks so its fixed cut pins the only interior split
+SIM_ARCHS = [
+    ("vgg9-cifar-small", dict(policy="fixed(b=4,cut=2)")),
+    ("smollm-tiny",
+     dict(policy="fixed(b=4,cut=1)", n_train=160, n_test=40, seq_len=32)),
+]
 
 
 def fmt_row(r: dict) -> str:
@@ -53,24 +68,64 @@ def fmt_row(r: dict) -> str:
     )
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
+    out_dir = out_dir or OUT_DIR
     recs = load_records("single")
     if not recs:
         emit(
             "roofline_table", 0.0,
             "no dry-run records yet (run python -m repro.launch.dryrun)"
         )
-        return
-    print("=== Roofline (single pod, 256 chips; v5e constants) ===")
-    for r in recs:
-        print(fmt_row(r))
-    ok = [r for r in recs if r.get("status") == "ok"]
-    fits = sum(1 for r in ok if r["fits_v5e_16g"])
-    emit("roofline_table", 0.0, f"records={len(recs)};ok={len(ok)};fits_16g={fits}")
-    multi = load_records("multi")
-    ok_m = sum(1 for r in multi if r.get("status") == "ok")
-    skip_m = sum(1 for r in multi if r.get("status") == "skipped")
-    emit("multipod_dryrun", 0.0, f"records={len(multi)};ok={ok_m};skipped={skip_m}")
+    else:
+        print("=== Roofline (single pod, 256 chips; v5e constants) ===")
+        for r in recs:
+            print(fmt_row(r))
+        ok = [r for r in recs if r.get("status") == "ok"]
+        fits = sum(1 for r in ok if r["fits_v5e_16g"])
+        emit(
+            "roofline_table", 0.0,
+            f"records={len(recs)};ok={len(ok)};fits_16g={fits}"
+        )
+        multi = load_records("multi")
+        ok_m = sum(1 for r in multi if r.get("status") == "ok")
+        skip_m = sum(1 for r in multi if r.get("status") == "skipped")
+        emit(
+            "multipod_dryrun", 0.0,
+            f"records={len(multi)};ok={ok_m};skipped={skip_m}"
+        )
+
+    # sim-backed rows: measured wall per cell on tiny grids, one group
+    # per arch family (arch is grid-pinned)
+    rounds = 6 if quick else 12
+    seed_list = list(range(seeds))
+    rows_sim = []
+    for arch, extra in SIM_ARCHS:
+        specs = [
+            make_spec(
+                n_clients=4, iid=True, agg_interval=2, seed=s, arch=arch,
+                estimate=False, rounds=rounds, eval_every=rounds,
+                **extra,
+            )
+            for s in seed_list
+        ]
+        results, wall = run_spec_grid(
+            f"roofline_sim_{arch}", specs, runner=runner, out_dir=out_dir
+        )
+        per_round_ms = wall / (len(specs) * rounds) * 1e3
+        for s, res in zip(seed_list, results):
+            rows_sim.append(
+                [arch, s, round(per_round_ms, 3),
+                 res.test_acc[-1], res.clock[-1]]
+            )
+        emit(
+            f"roofline_sim_{arch}", per_round_ms * 1e3,
+            f"wall={wall:.1f}s;cells={len(specs)};rounds={rounds}"
+        )
+    save_csv(
+        f"{out_dir}/roofline_sim.csv",
+        ["arch", "seed", "per_round_ms", "final_acc", "sim_clock_s"],
+        rows_sim
+    )
 
 
 if __name__ == "__main__":

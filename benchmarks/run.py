@@ -1,51 +1,126 @@
 """Benchmark driver — one module per paper figure/table.
 
-Prints ``name,us_per_call,derived`` CSV lines (plus per-figure CSV files
-under experiments/bench/).  ``--quick`` shrinks rounds/clients for CI.
+The one-command paper reproduction: every figure module builds
+`ExperimentSpec` grids and dispatches them through
+`Session.run_grid(runner=...)`, emitting mean-over-seeds CSVs (per-seed
+rows kept for error bands) plus ``<figure>.specs.json`` sidecars under
+``--out-dir``.  ``--quick`` shrinks rounds/clients/sweeps for CI (the
+``figures`` lane runs exactly that and uploads the CSVs as artifacts).
+
+A figure FAILS the run if its module raises, or if any CSV it is
+expected to produce is missing or has no data rows — an empty artifact
+is a broken figure, not a success.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
 
+# `python benchmarks/run.py` puts benchmarks/ itself on sys.path; the
+# figure modules import as `benchmarks.<mod>`, so add the repo root
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
 
+# (module name, import path, expected CSV basenames)
 BENCHES = [
-    ("fig2_bs_impact", "benchmarks.fig2_bs_impact"),
-    ("fig3_ms_impact", "benchmarks.fig3_ms_impact"),
-    ("fig5_6_convergence", "benchmarks.fig5_6_convergence"),
-    ("fig7_8_resources", "benchmarks.fig7_8_resources"),
-    ("fig9_num_devices", "benchmarks.fig9_num_devices"),
-    ("fig10_11_ablations", "benchmarks.fig10_11_ablations"),
-    ("roofline_table", "benchmarks.roofline_table"),
+    ("fig2_bs_impact", "benchmarks.fig2_bs_impact",
+     ["fig2a.csv", "fig2b.csv"]),
+    ("fig3_ms_impact", "benchmarks.fig3_ms_impact",
+     ["fig3a.csv", "fig3b.csv"]),
+    ("fig5_6_convergence", "benchmarks.fig5_6_convergence",
+     ["fig5_curves.csv", "fig6_summary.csv"]),
+    ("fig7_8_resources", "benchmarks.fig7_8_resources",
+     ["fig7_8.csv", "fig7b_sim.csv"]),
+    ("fig9_num_devices", "benchmarks.fig9_num_devices",
+     ["fig9.csv", "fig9_sim.csv"]),
+    ("fig10_11_ablations", "benchmarks.fig10_11_ablations",
+     ["fig10_11.csv"]),
+    ("roofline_table", "benchmarks.roofline_table",
+     ["roofline_sim.csv"]),
 ]
 
 
+def csv_has_rows(path: str) -> bool:
+    if not os.path.exists(path):
+        return False
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    return len(lines) >= 2  # header + at least one data row
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
         "--quick", action="store_true",
-        help="reduced rounds/clients (still exercises every "
-             "figure)"
+        help="reduced rounds/clients/sweeps (still exercises every "
+             "figure); what the CI figures lane runs"
     )
-    ap.add_argument("--only", default=None)
-    args, _ = ap.parse_known_args()
+    ap.add_argument(
+        "--only", default=None,
+        help="substring filter on figure module names"
+    )
+    ap.add_argument(
+        "--seeds", type=int, default=2,
+        help="seeds per grid cell series (>=2; curves report the mean, "
+             "per-seed rows stay for error bands)"
+    )
+    ap.add_argument(
+        "--out-dir", default=None,
+        help="CSV/specs output directory (default: experiments/bench, "
+             "or $BENCH_OUT)"
+    )
+    ap.add_argument(
+        "--runner", default="auto",
+        help="grid runner passed to Session.run_grid (auto | "
+             "sequential | vmap)"
+    )
+    args = ap.parse_args()
+    if args.seeds < 1:
+        ap.error("--seeds must be >= 1")
 
-    failures = 0
-    for name, module in BENCHES:
+    from benchmarks.common import OUT_DIR, record_figure_walls
+
+    out_dir = args.out_dir or OUT_DIR
+    failures, walls = [], []
+    for name, module, csvs in BENCHES:
         if args.only and args.only not in name:
             continue
         print(f"### {name}", flush=True)
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["main"])
-            mod.main(quick=args.quick)
-            print(f"### {name} done in {time.time()-t0:.1f}s", flush=True)
+            mod.main(
+                quick=args.quick, seeds=args.seeds,
+                out_dir=out_dir, runner=args.runner,
+            )
+            missing = [
+                c for c in csvs
+                if not csv_has_rows(os.path.join(out_dir, c))
+            ]
+            if missing:
+                print(
+                    f"### {name} FAILED: empty/missing {missing}",
+                    flush=True
+                )
+                failures.append(name)
+            else:
+                wall = time.time() - t0
+                walls.append((name, wall))
+                print(f"### {name} done in {wall:.1f}s", flush=True)
         except Exception:
             traceback.print_exc()
-            failures += 1
-    print(f"benchmarks complete; failures={failures}", flush=True)
+            failures.append(name)
+    if walls:
+        record_figure_walls(walls, quick=args.quick, out_dir=out_dir)
+    print(
+        f"benchmarks complete; failures={len(failures)}"
+        + (f" ({', '.join(failures)})" if failures else ""),
+        flush=True
+    )
     if failures:
         sys.exit(1)
 

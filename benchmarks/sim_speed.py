@@ -38,19 +38,17 @@ import numpy as np
 sys.path.insert(0, os.path.dirname(__file__))
 from common import (
     make_sim, make_spec, append_csv, git_sha, now_iso,  # noqa: E402
-    runner_id, HARNESS, OUT_DIR
+    runner_id, HARNESS, OUT_DIR, SIM_SPEED_HEADER
 )
 
 ENGINES = ["legacy", "vectorized", "scan"]
 # runner_id (hostname+CPU fingerprint) identifies the measuring box and
 # harness records the perf-harness state (common.setup_harness), so the
 # absolute-ms gate can compare like with like; pre-existing rows are
-# prefix-migrated (padded empty) by append_csv.
-HEADER = [
-    "config", "n_clients", "loop_ms", "vectorized_ms", "scan_ms",
-    "vec_speedup", "scan_speedup", "git_sha", "timestamp",
-    "runner_id", "harness"
-]
+# prefix-migrated (padded empty) by append_csv.  The schema lives in
+# common.SIM_SPEED_HEADER — the figure lane (benchmarks/run.py) appends
+# its wall-time rows to the same trajectory.
+HEADER = SIM_SPEED_HEADER
 # The CI gate *fails* on the speedup-ratio columns everywhere:
 # new_ratio vs the committed ratio is algebraically the absolute engine
 # slowdown normalized by the legacy engine's slowdown in the same run,
@@ -62,6 +60,9 @@ HEADER = [
 # against rows from unseen boxes.
 GATE_RATIO_COLS = ("vec_speedup", "scan_speedup")
 WARN_COLS = ("loop_ms", "vectorized_ms", "scan_ms")
+# figure-lane wall clocks are tracked but never fail the gate: they move
+# with cell counts/seeds and CI tenancy, not with engine de-optimization
+WARN_ONLY_COLS = ("wall_s",)
 GATE_FACTOR = 1.5
 
 
@@ -147,6 +148,15 @@ def check_regression(prev: tuple, rows: list) -> tuple:
                         f"({after / before:.2f}x absolute vs an unseen "
                         f"box — box change or uniform regression; "
                         f"not gated)")
+        for col in WARN_ONLY_COLS:
+            try:
+                before, after = float(old.get(col, "")), float(row[col])
+            except (ValueError, TypeError):
+                continue
+            if before > 0 and after > GATE_FACTOR * before:
+                warnings.append(
+                    f"{row['config']} {col}: {after:.1f} s vs committed "
+                    f"{before:.1f} s ({after / before:.2f}x; warn-only)")
     return failures, warnings
 
 
@@ -294,7 +304,7 @@ def main():
                 name, n, round(ms["legacy"], 1),
                 round(ms["vectorized"], 1), round(ms["scan"], 1),
                 round(vec_speedup, 2), round(scan_speedup, 2),
-                sha, ts, rid, HARNESS
+                sha, ts, rid, HARNESS, "", ""
             ])
             print(
                 f"{name:8s} N={n:3d}  loop {ms['legacy']:8.1f} ms/round  "

@@ -2,12 +2,17 @@
 
 `ExperimentSpec` (frozen, JSON round-trippable) describes one
 simulation cell; `Session` assembles and runs it; `Session.run_grid`
-executes whole policy x scenario grids, batching compatible cells into
-vmapped mega-runs over the scan engine.
+executes whole policy x scenario x seed grids, batching compatible
+cells into vmapped mega-runs over the scan engine (DESIGN.md §13).
 """
 
 from repro.api.grid import group_cells, run_group
-from repro.api.policies import list_policies, make_policy, register_policy
+from repro.api.policies import (
+    list_policies,
+    make_policy,
+    parse_policy,
+    register_policy,
+)
 from repro.api.runners import ExecutionChoice, pick, register_choice
 from repro.api.session import Session, run_grid
 from repro.api.spec import (
@@ -28,6 +33,7 @@ __all__ = [
     "list_policies",
     "load_specs",
     "make_policy",
+    "parse_policy",
     "register_policy",
     "run_grid",
     "run_group",

@@ -1,12 +1,24 @@
-"""The vmapped policy x scenario grid runner (DESIGN.md §10).
+"""The vmapped policy x scenario x seed grid runner (DESIGN.md §10, §13).
 
 `run_group` executes a list of *compatible* sessions — same
-`ExperimentSpec.grid_key()`: same model/data/seed, same `SFLConfig`,
-same round segmentation; only the policy and the scenario preset differ
-— as one mega-run: every cell's [N, ...]-stacked client units gain a
-leading grid axis, and each training segment dispatches once as a
-jitted ``vmap`` of the scan engine's donated-carry segment body instead
-of once per cell.
+`ExperimentSpec.grid_key()`: same model architecture and data shapes,
+same `SFLConfig`, same round segmentation; policy, scenario preset,
+seed, and partition are free axes — as one mega-run: every cell's
+[N, ...]-stacked client units gain a leading grid axis, and each
+training segment dispatches once as a jitted ``vmap`` of the scan
+engine's donated-carry segment body instead of once per cell.
+
+Seed crossing (DESIGN.md §13): cells built from different seeds carry
+different data arrays, model inits, device pools, and host RNG streams.
+All of that is already per-cell state — `Session` init runs per cell
+before stacking (per-cell model/sampler init), gather plans and
+participation plans are drawn from each cell's own sampler RNG, and
+clocks walk each cell's own device pool — so the only shared-by-
+construction piece was the device-resident dataset.  When the group's
+seeds differ, the member stores' arrays are [G]-stacked
+(`DeviceClientStore.stack_arrays`) and the vmapped body maps over them
+with ``in_axes=0``; a same-seed group keeps the historical broadcast
+(``in_axes=None``, one copy of the data on device).
 
 Bitwise contract (tested in tests/test_api.py and gated by the
 scenario-sweep ``--bench-grid`` mode): each cell's decision stream,
@@ -98,19 +110,39 @@ def run_group(sessions, *, verbose: bool = False) -> list:
     n_units_total = len(sim0.units)
 
     # one executable per (segment length, b_pad, sub-group size); sim0's
-    # bound segment body is shared by every cell (identical model + SFL
-    # config is what grid_key guarantees).  Fault mode is part of
-    # grid_key, so either every cell feeds a [R, N] participation plan
-    # (mapped over the grid axis) or none does (soft: parts=None).
+    # bound segment body is shared by every cell (identical model arch +
+    # SFL config is what grid_key guarantees — the *parameters* live in
+    # the stacked carry, per cell).  Fault mode is part of grid_key, so
+    # either every cell feeds a [R, N] participation plan (mapped over
+    # the grid axis) or none does (soft: parts=None).  Data arrays only
+    # depend on (seed, shape fields): a same-seed group broadcasts one
+    # device-resident copy (in_axes=None, the historical layout), a
+    # seed-crossing group maps over [G]-stacked per-cell arrays.
     faulty = spec0.fault_mode != "soft"
+    uniform_data = len({s.spec.seed for s in sessions}) == 1
     grid_fn = jax.jit(
         jax.vmap(
             sim0._scan_segment,
-            in_axes=(0, None, 0, 0, 0, None, 0 if faulty else None),
+            in_axes=(0, None, 0, 0, 0, None if uniform_data else 0,
+                     0 if faulty else None),
         ),
         donate_argnums=(0,),
     )
-    arrays = sim0.store.arrays
+    arrays_cache: dict = {}
+
+    def arrays_for(members):
+        """The dispatch's data operand for one member sub-group: the
+        shared store on the same-seed path, the members' [G]-stacked
+        per-cell stores otherwise (cached per sub-group — bucket
+        partitions recur across segments)."""
+        if uniform_data:
+            return sim0.store.arrays
+        key = tuple(members)
+        if key not in arrays_cache:
+            arrays_cache[key] = sim0.store.stack_arrays(
+                [sims[g].store for g in members]
+            )
+        return arrays_cache[key]
 
     res = [SimResult() for _ in range(n_cells)]
     clocks = [0.0] * n_cells
@@ -163,7 +195,9 @@ def run_group(sessions, *, verbose: bool = False) -> list:
             # uniform bucket: the whole grid is one donated carry
             b_pad, members = next(iter(buckets.items()))
             idx, rmask, masks, parts = plans(members, t, nxt, b_pad)
-            grid, losses = grid_fn(grid, t0, idx, rmask, masks, arrays, parts)
+            grid, losses = grid_fn(
+                grid, t0, idx, rmask, masks, arrays_for(members), parts
+            )
             losses = np.asarray(losses)
             for g in members:
                 seg_losses[g] = losses[g]
@@ -173,7 +207,9 @@ def run_group(sessions, *, verbose: bool = False) -> list:
             for b_pad, members in sorted(buckets.items()):
                 idx, rmask, masks, parts = plans(members, t, nxt, b_pad)
                 sub = _stack_cells([cells[g] for g in members])
-                sub, losses = grid_fn(sub, t0, idx, rmask, masks, arrays, parts)
+                sub, losses = grid_fn(
+                    sub, t0, idx, rmask, masks, arrays_for(members), parts
+                )
                 losses = np.asarray(losses)
                 for j, g in enumerate(members):
                     new_cells[g] = _cell_state(sub, j)

@@ -45,6 +45,41 @@ def list_policies() -> list:
     return sorted(_REGISTRY)
 
 
+def parse_policy(name: str) -> tuple:
+    """Split a (possibly parameterized) policy string into
+    ``(base_name, kwargs)``.
+
+    ``ExperimentSpec.policy`` stays a plain JSON string, so figure-grid
+    ablation axes are spelled inline: ``"fixed(b=8,cut=4)"``,
+    ``"fixed-ms(cut=4)"``, ``"fixed-bs(b=16)"``.  Values parse as int,
+    then float, then bare string; the base name resolves through the
+    registry exactly like an unparameterized policy.
+    """
+    name = name.strip()
+    if "(" not in name:
+        return name.lower(), {}
+    if not name.endswith(")"):
+        raise ValueError(f"malformed policy string {name!r}")
+    base, argstr = name[:-1].split("(", 1)
+    kwargs = {}
+    for part in argstr.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(
+                f"policy arg {part!r} in {name!r} must be key=value"
+            )
+        k, v = (s.strip() for s in part.split("=", 1))
+        for cast in (int, float, str):
+            try:
+                kwargs[k] = cast(v)
+                break
+            except ValueError:
+                continue
+    return base.lower(), kwargs
+
+
 def make_policy(
     name: str,
     profile,
@@ -54,13 +89,20 @@ def make_policy(
     seed: int = 0,
     **kw,
 ):
-    """Build the named policy's controller callable."""
-    key = name.lower()
+    """Build the named policy's controller callable.
+
+    Parameterized strings (``"fixed(b=8,cut=4)"``) parse through
+    `parse_policy`; inline args merge over (and win against) ``kw``.
+    """
+    key, inline = parse_policy(name)
     if key not in _REGISTRY:
         raise KeyError(
             f"unknown policy {name!r}; known: {list_policies()}"
         )
-    return _REGISTRY[key](profile, sfl, estimate=estimate, seed=seed, **kw)
+    merged = {**kw, **inline}
+    return _REGISTRY[key](
+        profile, sfl, estimate=estimate, seed=seed, **merged
+    )
 
 
 def _hasfl_factory(profile, sfl, *, estimate=True, seed=0, **kw):
@@ -70,8 +112,9 @@ def _hasfl_factory(profile, sfl, *, estimate=True, seed=0, **kw):
 def _baseline_factory(name: str) -> Callable:
     def factory(profile, sfl, *, estimate=True, seed=0, **kw):
         # non-adaptive-constant policies ignore estimate/seed: their
-        # randomness comes from the simulator's policy RNG stream
-        return BaselineController(name, profile, sfl)
+        # randomness comes from the simulator's policy RNG stream; kw
+        # carries the fixed classics' pinned b=/cut= knobs
+        return BaselineController(name, profile, sfl, **kw)
 
     return factory
 

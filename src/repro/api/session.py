@@ -55,7 +55,8 @@ class Session:
         spec = spec.validated()
         self.spec = spec
         self.cfg = get_config(spec.arch)
-        if spec.policy.lower() not in policy_registry.list_policies():
+        base_policy, _ = policy_registry.parse_policy(spec.policy)
+        if base_policy not in policy_registry.list_policies():
             raise KeyError(
                 f"unknown policy {spec.policy!r}; "
                 f"known: {policy_registry.list_policies()}"

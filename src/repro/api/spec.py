@@ -169,10 +169,13 @@ class ExperimentSpec:
         """Hashable compatibility key for `Session.run_grid` grouping.
 
         Cells sharing this key execute the same jitted program on the
-        same data and round segmentation — only policy decisions and
-        scenario trace states differ — so they can be stacked on a
-        leading grid axis and run as one vmapped mega-run.  ``None``
-        means the cell cannot be grouped (non-scan engine).
+        same *shapes* and round segmentation — policy decisions,
+        scenario trace states, seeds, and data partitions are all free
+        axes (DESIGN.md §13): per-cell data arrays and gather plans ride
+        a leading grid dimension, so cells with different seeds (fresh
+        data, model init, device pool, RNG streams) still stack into one
+        vmapped mega-run.  ``None`` means the cell cannot be grouped
+        (non-scan engine, or per-cell host side effects).
         """
         if self.resolved_engine != "scan":
             return None
@@ -184,11 +187,9 @@ class ExperimentSpec:
         return (
             self.arch,
             self.n_clients,
-            self.partition,
             self.n_train,
             self.n_test,
             self.seq_len,
-            self.seed,
             self.resolved_sfl,
             self.rounds,
             self.eval_every,

@@ -90,11 +90,27 @@ def hams(opt: HASFLOptimizer, b: np.ndarray) -> np.ndarray:
     return ms.solve()
 
 
-def policy(name: str, opt: HASFLOptimizer, rng: np.random.Generator):
-    """Returns (b, cuts) for one reconfiguration event."""
+def policy(name: str, opt: HASFLOptimizer, rng: np.random.Generator,
+           *, b=None, cut=None):
+    """Returns (b, cuts) for one reconfiguration event.
+
+    ``b``/``cut`` override the FIXED_B / ``fixed_cut`` defaults of the
+    non-adaptive half of the fixed policies — this is how parameterized
+    spec policies like ``"fixed(b=8,cut=4)"`` (the figure drivers'
+    ablation axes) reach the dispatch; the fully adaptive/random
+    policies take no overrides and reject them rather than silently
+    ignoring a typo'd knob.
+    """
     n = len(opt.devices)
     l = opt.profile.n_layers
     name = name.lower()
+    if name not in ("fixed", "fixed-bs", "fixed-ms") and not (
+        b is None and cut is None
+    ):
+        raise ValueError(
+            f"policy {name!r} takes no b=/cut= overrides (only the "
+            "fixed/fixed-bs/fixed-ms classics do)"
+        )
     if name == "hasfl":
         d = opt.solve()
         return d.b, d.cuts
@@ -109,12 +125,20 @@ def policy(name: str, opt: HASFLOptimizer, rng: np.random.Generator):
     if name == "rbs+rhams":
         b = rbs(n, rng, opt.sfl.max_batch)
         return b, rhams(opt, b)
+    ub = FIXED_B if b is None else int(b)
+    ucut = fixed_cut(l) if cut is None else int(cut)
     if name == "fixed":
-        return np.full(n, FIXED_B), np.full(n, fixed_cut(l))
+        return np.full(n, ub), np.full(n, ucut)
     if name == "fixed-bs":
-        b = np.full(n, FIXED_B)
-        return b, hams(opt, b)
+        if cut is not None:
+            raise ValueError("fixed-bs re-optimizes the cuts (HAMS); "
+                             "only b= can be pinned")
+        bs = np.full(n, ub)
+        return bs, hams(opt, bs)
     if name == "fixed-ms":
-        cuts = np.full(n, fixed_cut(l))
+        if b is not None:
+            raise ValueError("fixed-ms re-optimizes the batch sizes "
+                             "(HABS); only cut= can be pinned")
+        cuts = np.full(n, ucut)
         return habs(opt, cuts), cuts
     raise ValueError(f"unknown policy {name!r}")

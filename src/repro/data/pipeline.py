@@ -99,6 +99,32 @@ class DeviceClientStore:
     def n_clients(self) -> int:
         return len(self.client_indices)
 
+    @staticmethod
+    def stack_arrays(stores) -> dict:
+        """[G]-stack per-cell device arrays for the grid runner.
+
+        The seed-crossing mega-run (DESIGN.md §13) feeds each grid cell
+        its *own* dataset: the member stores' arrays — already
+        device-resident, one upload per cell at construction — are
+        stacked on a leading grid axis and the vmapped segment body maps
+        over them with ``in_axes=0``, so cell ``g``'s ``device_batch``
+        gathers from exactly the arrays its single-spec run would.  All
+        stores must hold the same keys and shapes (``grid_key`` pins
+        n_train/seq_len/arch, which is what guarantees it).
+        """
+        import jax.numpy as jnp
+
+        keys = set(stores[0].arrays)
+        for s in stores[1:]:
+            if set(s.arrays) != keys or any(
+                s.arrays[k].shape != stores[0].arrays[k].shape for k in keys
+            ):
+                raise ValueError(
+                    "stack_arrays needs same-keyed, same-shaped stores "
+                    "(grid cells must share data shapes)"
+                )
+        return {k: jnp.stack([s.arrays[k] for s in stores]) for k in keys}
+
     def real_counts(self, b) -> np.ndarray:
         """Per-client real (unpadded) sample count: min(b_i, |pool_i|)."""
         pools = np.asarray([len(p) for p in self.client_indices])

@@ -239,10 +239,15 @@ class BaselineController:
     sub-problem they are allowed to and nothing else.
     """
 
-    def __init__(self, name: str, profile: LayerProfile, sfl: SFLConfig):
+    def __init__(self, name: str, profile: LayerProfile, sfl: SFLConfig,
+                 *, b=None, cut=None):
         self.name = name
         self.profile = profile
         self.sfl = sfl
+        # pinned uniform knobs for the fixed classics (parameterized
+        # policy strings — `repro.api.policies.parse_policy`); None
+        # keeps the baselines module defaults
+        self.overrides = {"b": b, "cut": cut}
         self._opt: Optional[HASFLOptimizer] = None
 
     def __call__(self, sim, rng):
@@ -250,7 +255,7 @@ class BaselineController:
             self._opt = HASFLOptimizer(self.profile, sim.devices, self.sfl)
         else:
             self._opt.set_devices(sim.devices)
-        return baselines.policy(self.name, self._opt, rng)
+        return baselines.policy(self.name, self._opt, rng, **self.overrides)
 
     def state_dict(self) -> dict:
         # no cross-boundary mutable state (the lazily-built optimizer is
@@ -276,4 +281,4 @@ def make_controller(
         return HASFLController(
             profile, sfl, estimate=estimate, seed=seed, **kw
         )
-    return BaselineController(policy, profile, sfl)
+    return BaselineController(policy, profile, sfl, **kw)

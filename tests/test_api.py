@@ -142,6 +142,40 @@ def test_registry_policies_decide():
         ), name
 
 
+def test_parse_policy_and_parameterized_fixed():
+    """`"fixed(b=8,cut=4)"` policy strings parse into (base, kwargs) and
+    produce exactly the pinned decisions; malformed overrides fail
+    loudly at policy-build time."""
+    from repro.api import parse_policy
+
+    assert parse_policy("hasfl") == ("hasfl", {})
+    assert parse_policy("fixed(b=8,cut=4)") == ("fixed", {"b": 8, "cut": 4})
+    assert parse_policy("fixed-ms(cut=2)") == ("fixed-ms", {"cut": 2})
+    assert parse_policy("fixed-bs(b=16)") == ("fixed-bs", {"b": 16})
+
+    cfg = get_config("vgg9-cifar-small")
+    profile = model_profile(cfg)
+    n = 3
+    sfl = SFLConfig(n_devices=n, agg_interval=2, lr=0.05)
+    devices = sample_devices(n, np.random.default_rng(0))
+    sim_stub = types.SimpleNamespace(devices=devices)
+    policy = make_policy(
+        "fixed(b=8,cut=4)", profile, sfl, estimate=False, seed=0
+    )
+    b, cuts = policy(sim_stub, np.random.default_rng(1))
+    assert list(np.asarray(b)) == [8] * n
+    assert list(np.asarray(cuts)) == [4] * n
+    # overrides on adaptive policies are rejected (hasfl picks its own)
+    with pytest.raises(ValueError):
+        baselines.policy(
+            "hasfl",
+            types.SimpleNamespace(
+                devices=devices, profile=profile, sfl=sfl
+            ),
+            np.random.default_rng(0), b=8,
+        )
+
+
 def test_register_custom_policy():
     def factory(profile, sfl, *, estimate=True, seed=0, **kw):
         def policy(sim, rng):
@@ -210,15 +244,50 @@ def test_run_grid_matches_sequential_bitwise():
     assert gridded[0].clock != gridded[1].clock
 
 
+def test_run_grid_crosses_seeds_bitwise():
+    """PR-8 tentpole contract: cells with *different seeds* (fresh data,
+    model init, device pools, RNG streams) and different partitions stack
+    into one vmapped group — and every cell still reproduces its
+    single-spec `run()` stream bit-for-bit.  hasfl vs fixed crosses a
+    pow2 b_max bucket, so the sub-grouped dispatch path executes with
+    stacked per-cell data arrays on the grid axis.
+    """
+    specs = [
+        _tiny_spec(policy=policy, seed=seed,
+                   partition="iid" if seed == 0 else "noniid-shards")
+        for policy in ("hasfl", "fixed")
+        for seed in (0, 1)
+    ]
+    assert group_cells(specs) == [[0, 1, 2, 3]]
+
+    sequential = [Session(s).run() for s in specs]
+    gridded = Session.run_grid(specs)
+    assert len(gridded) == len(sequential)
+    for seq_res, grid_res in zip(sequential, gridded):
+        _assert_results_bitwise(seq_res, grid_res)
+    # the seed axis must actually differentiate the cells (same policy,
+    # different seed/partition -> different accuracy streams), or the
+    # grid ran one cell's data four times
+    assert gridded[0].test_acc != gridded[1].test_acc
+    assert gridded[2].test_acc != gridded[3].test_acc
+
+
 def test_run_grid_groups_only_compatible_cells():
     specs = [
         _tiny_spec(policy="fixed"),
         _tiny_spec(policy="hasfl"),
-        _tiny_spec(policy="fixed", seed=1),          # different data/init
-        _tiny_spec(policy="fixed", engine="vectorized"),  # non-scan
+        _tiny_spec(policy="fixed", seed=1),        # seed axis: stacks now
+        _tiny_spec(policy="fixed", partition="iid"),  # partition too
+        _tiny_spec(policy="fixed", engine="vectorized"),   # non-scan
+        _tiny_spec(policy="fixed", fault_mode="dropout"),  # fault plan
+        _tiny_spec(policy="fixed", checkpoint_every=2,
+                   checkpoint_dir="/tmp/ck"),      # host side effects
     ]
     groups = group_cells(specs)
-    assert groups == [[0, 1], [2], [3]]
+    assert groups == [[0, 1, 2, 3], [4], [5], [6]]
+    # ungroupable cells have no key at all
+    assert specs[4].grid_key() is None
+    assert specs[6].grid_key() is None
 
 
 def test_session_is_single_shot():
