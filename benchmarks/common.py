@@ -161,14 +161,30 @@ def run_spec_grid(figure, specs, *, runner="auto", out_dir=None):
     return results, wall
 
 
+def band_cols(cols):
+    """Error-band column names for ``cols``: std/min/max per column.
+
+    Appended LAST to a driver's header (after the value columns) so the
+    CSVs extend their old schema — `append_csv` prefix-migrates any
+    retained history by padding old rows empty.
+    """
+    out = []
+    for c in cols:
+        out.extend([f"{c}_std", f"{c}_min", f"{c}_max"])
+    return out
+
+
 def seed_curve_rows(series, results_by_seed, cols):
     """Eval-trajectory CSV rows for one series: per-seed + mean.
 
     ``series`` is the row's leading label columns (list), ``cols`` the
     `SimResult` attribute names to emit.  Every seed's cells share the
     eval schedule (same spec rounds/eval_every), so the mean curve is
-    the elementwise mean — the figure's plotted line; per-seed rows stay
-    in the CSV for error bands.
+    the elementwise mean — the figure's plotted line.  Mean rows carry
+    the seed spread in trailing ``band_cols(cols)`` columns (std/min/max
+    over the per-seed values at that eval point); per-seed rows — which
+    stay in the CSV and are what the bands are computed from — pad those
+    columns empty.
     """
     import numpy as np
 
@@ -179,13 +195,21 @@ def seed_curve_rows(series, results_by_seed, cols):
     for r in results[1:]:
         if r.rounds != rounds:
             raise ValueError("seed cells must share the eval schedule")
+    pad = [""] * (3 * len(cols))
     rows = []
     for s, r in zip(seeds, results):
         for k, t in enumerate(rounds):
-            rows.append(series + [s, t] + [getattr(r, c)[k] for c in cols])
-    means = [np.mean([getattr(r, c) for r in results], axis=0) for c in cols]
+            rows.append(
+                series + [s, t] + [getattr(r, c)[k] for c in cols] + pad)
+    stacks = [np.asarray([getattr(r, c) for r in results]) for c in cols]
     for k, t in enumerate(rounds):
-        rows.append(series + ["mean", t] + [float(m[k]) for m in means])
+        band = []
+        for st in stacks:
+            band.extend([float(st[:, k].std()), float(st[:, k].min()),
+                         float(st[:, k].max())])
+        rows.append(
+            series + ["mean", t]
+            + [float(st[:, k].mean()) for st in stacks] + band)
     return rows
 
 
@@ -193,14 +217,22 @@ def seed_summary_rows(series, results_by_seed, fns):
     """Scalar-summary CSV rows for one series: per-seed + mean.
 
     ``fns``: list of ``SimResult -> float`` extractors (final acc,
-    converged time, ...)."""
+    converged time, ...).  Mean rows append std/min/max bands per
+    extractor (same trailing-column convention as `seed_curve_rows`)."""
     import numpy as np
 
     series = list(series)
     seeds = sorted(results_by_seed)
-    vals = [[fn(results_by_seed[s]) for fn in fns] for s in seeds]
-    rows = [series + [s] + v for s, v in zip(seeds, vals)]
-    rows.append(series + ["mean"] + [float(x) for x in np.mean(vals, 0)])
+    vals = np.asarray(
+        [[fn(results_by_seed[s]) for fn in fns] for s in seeds], float)
+    pad = [""] * (3 * len(fns))
+    rows = [series + [s] + list(v) + pad for s, v in zip(seeds, vals)]
+    band = []
+    for j in range(len(fns)):
+        band.extend([float(vals[:, j].std()), float(vals[:, j].min()),
+                     float(vals[:, j].max())])
+    rows.append(
+        series + ["mean"] + [float(x) for x in vals.mean(0)] + band)
     return rows
 
 

@@ -12,7 +12,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (
-    make_spec, emit, save_csv, seed_summary_rows, run_spec_grid, OUT_DIR
+    make_spec, emit, save_csv, seed_summary_rows, band_cols, \
+    run_spec_grid, OUT_DIR
 )
 
 BASE_SEED = 2
@@ -79,7 +80,7 @@ def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
         [
             "figure", "setting", "scheme", "seed", "final_acc",
             "converged_time_s"
-        ], rows
+        ] + band_cols(["final_acc", "converged_time_s"]), rows
     )
 
 

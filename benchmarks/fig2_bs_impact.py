@@ -13,7 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (
-    make_spec, full_profile, emit, save_csv, seed_curve_rows,
+    make_spec, full_profile, emit, save_csv, seed_curve_rows, band_cols,
     run_spec_grid, OUT_DIR
 )
 from repro.config import SFLConfig
@@ -56,7 +56,8 @@ def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
         )
     save_csv(
         f"{out_dir}/fig2a.csv",
-        ["series", "seed", "round", "acc", "clock"], rows
+        ["series", "seed", "round", "acc", "clock"]
+        + band_cols(["acc", "clock"]), rows
     )
 
     # (b) per-round latency vs b — full VGG-16 profile, Table-I devices

@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (
-    make_spec, full_profile, emit, save_csv, seed_curve_rows,
+    make_spec, full_profile, emit, save_csv, seed_curve_rows, band_cols,
     run_spec_grid, OUT_DIR
 )
 
@@ -70,7 +70,8 @@ def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
             f"mean_final_acc={mean_acc:.4f};seeds={len(seed_list)}"
         )
     save_csv(
-        f"{out_dir}/fig3a.csv", ["series", "seed", "round", "acc"], rows_a
+        f"{out_dir}/fig3a.csv", ["series", "seed", "round", "acc"] + band_cols(["acc"]),
+        rows_a
     )
 
 

@@ -12,6 +12,7 @@ import numpy as np
 
 from benchmarks.common import (
     make_spec, emit, save_csv, seed_curve_rows, seed_summary_rows,
+    band_cols,
     run_spec_grid, POLICIES, OUT_DIR
 )
 
@@ -69,14 +70,16 @@ def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
         )
     save_csv(
         f"{out_dir}/fig5_curves.csv",
-        ["setting", "policy", "seed", "round", "acc", "clock"], rows
+        ["setting", "policy", "seed", "round", "acc", "clock"]
+        + band_cols(["acc", "clock"]), rows
     )
     save_csv(
         f"{out_dir}/fig6_summary.csv",
         [
             "setting", "policy", "seed", "final_acc",
             "converged_time_s", "total_clock_s"
-        ], summary
+        ] + band_cols(["final_acc", "converged_time_s", "total_clock_s"]),
+        summary
     )
 
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (
-    make_spec, full_profile, emit, save_csv, seed_summary_rows,
+    make_spec, full_profile, emit, save_csv, seed_summary_rows, band_cols,
     run_spec_grid, POLICIES, OUT_DIR, robust_theta
 )
 from repro.config import SFLConfig
@@ -79,7 +79,8 @@ def main(quick: bool = False, seeds: int = 2, out_dir=None, runner="auto"):
         )
     save_csv(
         f"{out_dir}/fig9_sim.csv",
-        ["n_devices", "policy", "seed", "converged_time_s", "final_acc"],
+        ["n_devices", "policy", "seed", "converged_time_s", "final_acc"]
+        + band_cols(["converged_time_s", "final_acc"]),
         rows_sim
     )
 

@@ -1,0 +1,154 @@
+"""Sync vs semi-async time-to-target-loss under streaming traffic.
+
+The traffic plane's headline claim (ISSUE 9, DESIGN.md §14): when the
+environment churns — outage-floored resources, devices leaving
+mid-round — a synchronous round pays the Eq. 38 straggler max every
+round, while the semi-async server advances on the fastest
+``ceil(buffer_frac * n_live)`` deliveries and lets stragglers report
+late at a staleness-discounted weight.  This driver runs both modes on
+the same model/seed under the ``churn-heavy`` and ``straggler-bursts``
+presets and reports the virtual-clock time each takes to first reach a
+shared target train loss (the worse of the two modes' best losses, so
+both always reach it).
+
+``--smoke`` runs the CI-sized comparison and *gates*: it exits non-zero
+unless semi-async beats sync time-to-target on churn-heavy (the slow CI
+lane's ``--smoke-traffic`` contract).
+
+Outputs: ``traffic_sweep.csv`` (+ committed specs) under the bench out
+dir, per-run event logs (``traffic_events_<scenario>``), and
+``config=traffic-*`` wall rows appended to the ``sim_speed.csv``
+trajectory (``figure="traffic"``, engine ms/ratio columns empty — the
+PR 8 prefix-migration schema).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+from common import (  # noqa: E402
+    HARNESS, OUT_DIR, SIM_SPEED_HEADER, append_csv, emit, git_sha,
+    make_spec, now_iso, runner_id, save_csv,
+)
+from repro.api import Session, TrafficSpec, save_specs
+
+SCENARIOS = ("churn-heavy", "straggler-bursts")
+
+
+def _specs(scenario: str, *, quick: bool, seed: int):
+    """(sync spec, semi-async spec) — same cell, traffic toggled."""
+    rounds = 24 if quick else 60
+    base = dict(
+        n_clients=4 if quick else 8,
+        iid=True,
+        n_train=160 if quick else 1200,
+        n_test=48 if quick else 300,
+        agg_interval=4,
+        seed=seed,
+        policy="fixed(b=8,cut=4)",
+        estimate=False,
+        rounds=rounds,
+        eval_every=4,
+        scenario=scenario,
+        scenario_seed=7,
+        arch="resnet10-cifar-small" if quick else "vgg9-cifar-small",
+    )
+    tspec = TrafficSpec(
+        n_users=100_000,
+        arrival_rate=0.02,
+        mean_dwell=4000.0,
+        buffer_frac=0.5,
+        staleness_alpha=0.5,
+        shard_size=40 if quick else 150,
+        seed=11,
+    )
+    return make_spec(**base), make_spec(**base, traffic=tspec)
+
+
+def time_to_target(res, target: float) -> float:
+    """First eval clock at which train loss is <= ``target`` (inf if
+    the curve never gets there)."""
+    for clock, loss in zip(res.clock, res.train_loss):
+        if loss <= target:
+            return float(clock)
+    return float("inf")
+
+
+def main(smoke: bool = False, seed: int = 0, out_dir=None) -> int:
+    out_dir = out_dir or OUT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    sha, ts, rid = git_sha(), now_iso(), runner_id()
+    rows, wall_rows, all_specs = [], [], []
+    gate_ok = True
+
+    for scenario in SCENARIOS:
+        spec_sync, spec_semi = _specs(scenario, quick=smoke, seed=seed)
+        all_specs += [spec_sync, spec_semi]
+        runs = {}
+        for mode, spec in (("sync", spec_sync), ("semi-async", spec_semi)):
+            sess = Session(spec)
+            t0 = time.time()
+            res = sess.run()
+            wall = time.time() - t0
+            runs[mode] = (sess, res)
+            wall_rows.append(
+                [f"traffic-{scenario}-{mode}", spec.n_clients,
+                 "", "", "", "", "", sha, ts, rid, HARNESS,
+                 "traffic", round(wall, 1)])
+            if sess.plane is not None:
+                sess.plane.log.save(
+                    os.path.join(out_dir, f"traffic_events_{scenario}"))
+
+        # the shared target: the worse of the two best losses — both
+        # curves reach it, so neither mode's tta is vacuous inf
+        target = max(min(r.train_loss) for _, r in runs.values())
+        for mode, (sess, res) in runs.items():
+            tta = time_to_target(res, target)
+            counts = sess.plane.log.counts() if sess.plane else {}
+            rows.append([
+                scenario, mode, seed, target, tta,
+                res.train_loss[-1], res.clock[-1],
+                counts.get("deliver", ""), counts.get("admit", ""),
+                counts.get("evict", ""),
+            ])
+            emit(f"traffic_{scenario}_{mode}", tta * 1e6,
+                 f"tta_s={tta:.1f};target_loss={target:.4f}")
+        speedup = (time_to_target(runs["sync"][1], target)
+                   / max(time_to_target(runs["semi-async"][1], target),
+                         1e-12))
+        print(f"[{scenario}] semi-async tta speedup over sync: "
+              f"{speedup:.2f}x", flush=True)
+        if scenario == "churn-heavy" and not speedup > 1.0:
+            gate_ok = False
+
+    save_csv(
+        os.path.join(out_dir, "traffic_sweep.csv"),
+        ["scenario", "mode", "seed", "target_loss", "tta_s",
+         "final_train_loss", "final_clock_s", "n_deliver", "n_admit",
+         "n_evict"],
+        rows)
+    save_specs(os.path.join(out_dir, "traffic_sweep.specs.json"), all_specs)
+    append_csv(os.path.join(out_dir, "sim_speed.csv"),
+               SIM_SPEED_HEADER, wall_rows)
+
+    if smoke and not gate_ok:
+        print("SMOKE GATE FAIL: semi-async did not beat sync "
+              "time-to-target on churn-heavy", flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", "--smoke-traffic", action="store_true",
+                    dest="smoke",
+                    help="CI-sized run; gate semi-async > sync on "
+                         "churn-heavy (--smoke-traffic is the CI lane's "
+                         "spelling)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default=None, dest="out_dir")
+    args = ap.parse_args()
+    sys.exit(main(smoke=args.smoke, seed=args.seed, out_dir=args.out_dir))

@@ -21,12 +21,14 @@ from repro.api.spec import (
     load_specs,
     save_specs,
 )
+from repro.traffic import TrafficSpec
 
 __all__ = [
     "SPEC_VERSION",
     "ExecutionChoice",
     "ExperimentSpec",
     "Session",
+    "TrafficSpec",
     "group_cells",
     "pick",
     "register_choice",

@@ -57,8 +57,12 @@ def group_cells(specs) -> list:
     """Partition spec indices into grid-compatible groups, order-stable.
 
     Returns a list of index lists; specs with ``grid_key() is None``
-    (non-scan engines) stay singletons and fall back to sequential
-    `Session.run()`.
+    stay singletons and fall back to sequential `Session.run()` —
+    non-scan engines, checkpointed cells, and traffic-enabled cells
+    (the traffic plane's event walk rebinds store pools and rewrites
+    parameter rows between scan dispatches: per-cell host state the
+    vmapped mega-run cannot replay — the DESIGN.md §14 refuse-to-stack
+    rule).
     """
     order, groups = [], {}
     for i, spec in enumerate(specs):

@@ -16,6 +16,7 @@ through untouched, so committed spec files replay exactly.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Optional
 
@@ -41,23 +42,42 @@ class ExecutionChoice:
 _DEFAULT = ExecutionChoice()
 
 # Measured regimes (DESIGN.md §11; benchmarks/ committed wall_s rows):
-# - CNN cells on CPU: sequential + the im2col custom-vjp conv ("kernel"
-#   dispatches to it off-TPU).  The kernel collapses the vgg9 smoke
-#   sweep 1291.0 s -> 91.3 s sequential; the grid runner, same impls,
-#   takes 184.6 s — cell-batching conv matmuls buys nothing on a CPU
-#   core and thrashes cache (im2col patches are kh*kw x activations,
-#   multiplied by the grid axis), so the registry picks sequential.
+# - CNN cells on a SINGLE CPU core: sequential + the im2col custom-vjp
+#   conv ("kernel" dispatches to it off-TPU).  The kernel collapses the
+#   vgg9 smoke sweep 1291.0 s -> 91.3 s sequential; the grid runner,
+#   same impls, takes 184.6 s — cell-batching conv matmuls buys nothing
+#   on one core and thrashes cache (im2col patches are kh*kw x
+#   activations, multiplied by the grid axis), so the 1-core row picks
+#   sequential.  With >= 2 cores XLA parallelizes the grid-batched
+#   matmuls across cores while sequential cells still run one at a time,
+#   and the measured ordering flips to grid — `_cnn_cpu_choice` resolves
+#   the row from the visible core count at pick time.
 # - token cells: grid + oracle (the dispatch-economy regime — 2.02x on
 #   the smollm-tiny sweep; no conv to replace).
 # - TPU rows keep the grid (batching feeds the MXU instead of fighting
 #   a cache) and also fuse the clip+SGD update, a no-op gain on CPU
 #   where "kernel" update dispatch falls back to the same jnp algebra.
 _REGISTRY = {
-    ("cnn", "cpu"): ExecutionChoice("sequential", conv_impl="kernel"),
     ("cnn", "tpu"): ExecutionChoice("grid", conv_impl="kernel",
                                     update_impl="kernel"),
     ("token", "tpu"): ExecutionChoice("grid", update_impl="kernel"),
 }
+
+
+def cpu_cores() -> int:
+    """Cores the runtime can actually use (``REPRO_CPU_CORES`` env var
+    overrides — tests and pinned-affinity launchers set it)."""
+    env = os.environ.get("REPRO_CPU_CORES")
+    if env:
+        return max(1, int(env))
+    return os.cpu_count() or 1
+
+
+def _cnn_cpu_choice() -> ExecutionChoice:
+    """The measured (cnn, cpu) row, resolved from the core count."""
+    if cpu_cores() >= 2:
+        return ExecutionChoice("grid", conv_impl="kernel")
+    return ExecutionChoice("sequential", conv_impl="kernel")
 
 
 def arch_family(arch: str) -> str:
@@ -65,9 +85,17 @@ def arch_family(arch: str) -> str:
 
 
 def pick(spec: ExperimentSpec) -> ExecutionChoice:
-    """The registry's choice for one cell (grid + oracle when unkeyed)."""
-    return _REGISTRY.get(
-        (arch_family(spec.arch), jax.default_backend()), _DEFAULT)
+    """The registry's choice for one cell (grid + oracle when unkeyed).
+
+    A `register_choice` pin always wins; the (cnn, cpu) default is
+    core-count-aware (see `_cnn_cpu_choice`).
+    """
+    key = (arch_family(spec.arch), jax.default_backend())
+    if key in _REGISTRY:
+        return _REGISTRY[key]
+    if key == ("cnn", "cpu"):
+        return _cnn_cpu_choice()
+    return _DEFAULT
 
 
 def apply_choice(spec: ExperimentSpec,

@@ -16,6 +16,7 @@ run the spec describes.  Build a fresh `Session` (cheap) per run.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 from typing import List, Optional, Sequence, Union
 
@@ -30,7 +31,7 @@ from repro.config import get_config
 from repro.core.bcd import HASFLOptimizer
 from repro.core.latency import sample_devices
 from repro.core.profiles import model_profile
-from repro.core.sfl import SFLEdgeSimulator, SimResult
+from repro.core.sfl import SFLEdgeSimulator, SimResult, pow2_bucket
 from repro.data import (
     ClientSampler,
     make_cifar_like,
@@ -73,16 +74,36 @@ class Session:
         self.model = build_model(self.cfg)
         rng = np.random.default_rng(spec.seed)
         train, test, shard_labels = self._build_data(spec)
-        if spec.partition == "iid":
-            shards = partition_iid(spec.n_train, spec.n_clients, rng)
+        if spec.traffic is None:
+            if spec.partition == "iid":
+                shards = partition_iid(spec.n_train, spec.n_clients, rng)
+            else:
+                shards = partition_noniid_shards(
+                    shard_labels, spec.n_clients, rng)
+            self.sampler = ClientSampler(train, shards, rng)
+            self.sfl = spec.resolved_sfl
+            n_slots = spec.n_clients
+            self._plane = None
         else:
-            shards = partition_noniid_shards(shard_labels, spec.n_clients, rng)
-        self.sampler = ClientSampler(train, shards, rng)
-        self.sfl = spec.resolved_sfl
+            # streaming traffic (DESIGN.md §14): the simulator is built
+            # at pow2 slot capacity with every slot bound to the dummy
+            # pool; the plane admits the initial cohort (and every later
+            # arrival's derived shard/profile) by slot surgery, so the
+            # static partition is skipped entirely
+            from repro.traffic import TrafficPlane, dummy_pool
+
+            n_slots = pow2_bucket(spec.n_clients)
+            self.sampler = ClientSampler(
+                train, [dummy_pool() for _ in range(n_slots)], rng)
+            self.sfl = dataclasses.replace(
+                spec.resolved_sfl, n_devices=n_slots)
+            self._plane = TrafficPlane(
+                spec.traffic, n_train=spec.n_train,
+                cohort=spec.n_clients, capacity=n_slots)
         # token archs: the latency/controller profile must price the
         # sequence length the cell actually trains on (CNNs ignore it)
         self.profile = model_profile(self.cfg, seq_len=spec.seq_len)
-        self.devices = sample_devices(spec.n_clients, rng)
+        self.devices = sample_devices(n_slots, rng)
         self.sim = SFLEdgeSimulator(
             self.model,
             self.sampler,
@@ -155,6 +176,12 @@ class Session:
     @property
     def engine(self) -> str:
         return self.sim.engine
+
+    @property
+    def plane(self):
+        """The cell's `TrafficPlane` (None on synchronous specs) — the
+        event log and slot state live here after `run()`."""
+        return self._plane
 
     @property
     def optimizer(self) -> HASFLOptimizer:
@@ -299,6 +326,7 @@ class Session:
             checkpoint_every=self.spec.checkpoint_every,
             snapshot_cb=snapshot_cb,
             resume=self._resume,
+            traffic=self._plane,
         )
 
     @classmethod

@@ -20,6 +20,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.config import SFLConfig
+from repro.traffic.population import TrafficSpec
 
 # Bumped when fields change incompatibly; `from_dict` accepts any dict
 # whose version matches and rejects unknown keys, so stale spec files
@@ -89,6 +90,11 @@ class ExperimentSpec:
     # continues bitwise-identically from the latest one.  0 disables.
     checkpoint_every: int = 0
     checkpoint_dir: Optional[str] = None
+    # streaming traffic (DESIGN.md §14): a `TrafficSpec` switches the
+    # cell to semi-async rounds over a live population — the simulator
+    # is built at pow2 slot capacity and `n_clients` becomes the active
+    # cohort cap.  None is the synchronous path, bit-for-bit unchanged.
+    traffic: Optional[TrafficSpec] = None
     sfl: SFLConfig = SFLConfig(lr=0.05)
 
     # -- validation ---------------------------------------------------------
@@ -145,6 +151,24 @@ class ExperimentSpec:
             )
         if not isinstance(self.sfl, SFLConfig):
             raise ValueError("sfl must be an SFLConfig")
+        if self.traffic is not None:
+            if not isinstance(self.traffic, TrafficSpec):
+                raise ValueError("traffic must be a TrafficSpec or None")
+            self.traffic.validated()
+            if self.resolved_engine != "scan":
+                raise ValueError(
+                    "traffic mode is a segment-boundary feature — "
+                    "engine='scan' (or None) only")
+            if self.fault_mode != "soft":
+                raise ValueError(
+                    "traffic mode owns its fault semantics — "
+                    "fault_mode='soft' only")
+            if self.checkpoint_every:
+                raise ValueError(
+                    "traffic mode does not support checkpointing yet")
+            if self.n_clients > 64:
+                raise ValueError(
+                    "traffic mode caps the active cohort at 64 slots")
         return self
 
     # -- derived views ------------------------------------------------------
@@ -183,6 +207,11 @@ class ExperimentSpec:
             # snapshot side effects (file writes, resume dicts) are
             # per-cell host state the vmapped mega-run cannot replay —
             # checkpointed cells always run alone via `Session.run`
+            return None
+        if self.traffic is not None:
+            # refuse to stack: the traffic plane's event walk mutates
+            # per-cell host state (slot surgery, virtual clock, store
+            # pool rebinds) between scan dispatches — DESIGN.md §14
             return None
         return (
             self.arch,
@@ -228,6 +257,8 @@ class ExperimentSpec:
             raise ValueError(f"unknown spec fields: {sorted(unknown)}")
         if isinstance(d.get("sfl"), dict):
             d["sfl"] = SFLConfig(**d["sfl"])
+        if isinstance(d.get("traffic"), dict):
+            d["traffic"] = TrafficSpec(**d["traffic"])
         return cls(**d).validated()
 
     @classmethod

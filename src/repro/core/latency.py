@@ -203,6 +203,26 @@ class LatencyModel:
             t_agg = 0.0
         return part, t_split, t_agg
 
+    def per_client_round(self, b, cuts) -> np.ndarray:
+        """[N] *unbarriered* per-client round durations (traffic plane).
+
+        The semi-async mode has no Eq. 38 straggler max: each client's
+        update arrives when *that client* finishes, so its duration is
+        its own forward + activation upload + its share of the server
+        compute (Eq. 30/31 restricted to its own activations — the
+        server pipelines clients independently in this mode) + gradient
+        download + backward.  The Eq. 39 aggregation exchange is not
+        charged here; the plane's server closes rounds on deliveries,
+        not barriers (DESIGN.md §14).
+        """
+        p = self.profile
+        b = np.asarray(b, float)
+        j = np.asarray(cuts, int) - 1
+        rl = self.round_latency(b, cuts)
+        srv = b * ((p.rho[-1] - p.rho[j]) + (p.bwd[-1] - p.bwd[j])) \
+            / self.sfl.server_flops
+        return rl.t_f + rl.t_a_up + srv + rl.t_g_down + rl.t_b
+
     def total(self, b, cuts, rounds: int) -> float:               # (40)
         rl = self.round_latency(b, cuts)
         return rounds * rl.t_split + (rounds // self.sfl.agg_interval) * rl.t_agg

@@ -478,7 +478,8 @@ class SFLEdgeSimulator:
         self, policy_fn: Callable, rounds: int, eval_every: int = 10,
         reconfigure_every: Optional[int] = None,
         verbose: bool = False, scenario=None,
-        checkpoint_every: int = 0, snapshot_cb=None, resume=None
+        checkpoint_every: int = 0, snapshot_cb=None, resume=None,
+        traffic=None
     ) -> SimResult:
         """policy_fn(sim, rng) -> (b [N], cuts_layers [N]).
 
@@ -495,8 +496,25 @@ class SFLEdgeSimulator:
         snapshot (`Session.resume` assembles it) that continues the run
         bitwise-identically from its round.  Both are segment-boundary
         objects: scan engine only.
+
+        ``traffic`` (a `repro.traffic.TrafficPlane`) switches the run to
+        semi-async streaming mode: the plane's event walk replaces the
+        barriered Eq. 38 clock, per-round staleness weights ride the
+        participation lane, and cohort churn rewrites store slots at
+        segment boundaries.  ``traffic=None`` is the synchronous path,
+        bit-for-bit unchanged (the tier-1 gate).  Scan engine only, and
+        mutually exclusive with checkpoint/resume.
         """
         reconf = reconfigure_every or self.sfl.agg_interval
+        if traffic is not None:
+            if self.engine != "scan":
+                raise ValueError("traffic mode needs engine='scan'")
+            if checkpoint_every or snapshot_cb or resume is not None:
+                raise ValueError(
+                    "traffic mode does not support checkpoint/resume yet")
+            return self._run_traffic(
+                policy_fn, rounds, eval_every, reconf, verbose, scenario,
+                traffic)
         if self.engine == "scan":
             return self._run_scan(
                 policy_fn, rounds, eval_every, reconf,
@@ -598,12 +616,20 @@ class SFLEdgeSimulator:
 
     def _record_metrics(
         self, res: SimResult, t: int, clock: float,
-        losses, verbose: bool
+        losses, verbose: bool, live=None
     ) -> None:
-        """Eval + metric append; the only host fetch of ``losses``."""
-        agg = self._aggregate_model()
+        """Eval + metric append; the only host fetch of ``losses``.
+
+        ``live`` ([N] bool, traffic mode) restricts both the aggregate
+        model and the train-loss mean to occupied slots — empty slots
+        train a weight-0 dummy batch whose loss is meaningless.
+        """
+        agg = self._aggregate_model(live)
         tl, ta = self._eval_fn(agg, self.test_batch)
-        mean_loss = float(np.mean(np.asarray(losses)))
+        losses = np.asarray(losses)
+        if live is not None and live.any():
+            losses = losses[np.asarray(live, bool)]
+        mean_loss = float(np.mean(losses))
         res.rounds.append(t)
         res.clock.append(clock)
         res.train_loss.append(mean_loss)
@@ -707,9 +733,77 @@ class SFLEdgeSimulator:
                 snapshot_cb(t, clock, b, cuts, res)
         return res
 
-    def _aggregate_model(self):
-        """Virtual aggregated model w̄ (analysis object, Sec. IV)."""
+    def _run_traffic(
+        self, policy_fn: Callable, rounds: int, eval_every: int,
+        reconf: int, verbose: bool, scenario, traffic
+    ) -> SimResult:
+        """Segment scheduler for the semi-async streaming mode.
+
+        Structure mirrors `_run_scan` — same boundaries, same scan
+        executable — with three substitutions (DESIGN.md §14): the
+        per-round participation plan comes from the plane's event walk
+        (staleness weights, never None), the wall clock is the plane's
+        virtual clock (no Eq. 38 barrier), and segment boundaries run
+        the plane's admit/evict slot surgery before the policy fires.
+        Empty slots train the 1-sample dummy batch at weight zero, so
+        every array shape matches the fixed-cohort run and the scan
+        executable is shared.
+        """
+        res = SimResult()
+        traffic.attach(self, scenario)
+        traffic.inject_profiles(self, scenario, 0)
+        t = 0
+        b, cuts = policy_fn(self, self.rng)
+        self._record_policy(res, b, cuts)
+        n_units_total = len(self.units)
+
+        while t < rounds:
+            nxt = min(
+                (t // eval_every + 1) * eval_every,
+                (t // reconf + 1) * reconf, rounds
+            )
+            ucuts = self._unit_cuts(np.asarray(cuts))
+            l_c_units = int(np.max(ucuts))
+            masks = jnp.asarray(
+                SP.client_unit_mask(self.cfg, n_units_total, l_c_units))
+            b_eff = traffic.effective_batches(b)
+            b_pad = pow2_bucket(int(np.max(b_eff)))
+            idx = self.store.segment_indices(nxt - t, b_eff, b_pad)
+            row_mask = self.store.row_mask(b_eff, b_pad)
+            parts = jnp.asarray(
+                traffic.plan_segment(self, scenario, t, nxt, b_eff, cuts))
+            self._stacked, seg_losses = self._scan_fn(
+                self._stacked, jnp.asarray(t, jnp.int32), idx, row_mask,
+                masks, self.store.arrays, parts)
+            t = nxt
+
+            traffic.apply_boundary(self, t)
+            # the policy observes round-t resources for the *new* cohort
+            traffic.inject_profiles(self, scenario, t)
+            b, cuts = self._maybe_reconfigure(
+                res, policy_fn, t, reconf, rounds, b, cuts)
+            if t % eval_every == 0 or t == rounds:
+                self._record_metrics(
+                    res, t, traffic.clock, np.asarray(seg_losses)[-1],
+                    verbose, live=traffic.live_mask())
+        return res
+
+    def _aggregate_model(self, live=None):
+        """Virtual aggregated model w̄ (analysis object, Sec. IV).
+
+        ``live`` ([N] bool, traffic mode) means over occupied slots only
+        (all-slot mean when every/no slot is live — empty slots track
+        the broadcast, so the two agree in the degenerate cases)."""
         if self.vectorized:
+            if live is not None:
+                live = np.asarray(live, bool)
+                if live.any() and not live.all():
+                    sel = jnp.asarray(np.flatnonzero(live))
+                    return [
+                        jax.tree_util.tree_map(
+                            lambda a: a[sel].mean(axis=0), u)
+                        for u in self._stacked
+                    ]
             return SP.mean_unit_trees(self._stacked)
         return [
             jax.tree_util.tree_map(

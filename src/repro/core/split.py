@@ -232,7 +232,11 @@ def hasfl_round_update(
             w = participation.astype(spec.dtype)
             w_col = w.reshape((-1,) + (1,) * (spec.ndim - 1))
             cnt = w.sum()
-            common = (spec * w_col).sum(axis=0) / jnp.maximum(cnt, 1.0)
+            # where, not maximum: 0/1 participation gives cnt in {0} ∪
+            # [1, N] and the two agree bitwise, but the traffic plane's
+            # fractional staleness weights can sum below 1 — a lone
+            # survivor at weight 0.3 must still get spec, not 0.3*spec
+            common = (spec * w_col).sum(axis=0) / jnp.where(cnt > 0, cnt, 1.0)
             keep = jnp.logical_and(keep_spec, participation > 0).reshape(
                 (-1,) + (1,) * (spec.ndim - 1))
             use_common = jnp.logical_and(

@@ -125,6 +125,23 @@ class DeviceClientStore:
                 )
         return {k: jnp.stack([s.arrays[k] for s in stores]) for k in keys}
 
+    def set_pool(self, slot: int, indices) -> None:
+        """Rebind one client slot's shard pool (traffic admit/evict).
+
+        The resizable-store hook (DESIGN.md §14): the traffic plane
+        admits a user into a slot by swapping in their shard indices
+        (and evicts by swapping the dummy pool back).  Only the *values*
+        future `segment_indices` plans gather change — every array
+        shape is a function of (capacity, b_pad), so the jitted scan
+        executable survives the rebind.  Pools must stay non-empty:
+        an empty pool would make the slot's gradient NaN, which poisons
+        the weighted survivor mean even at weight 0 (``0 * NaN``).
+        """
+        idx = np.asarray(indices)
+        if idx.size == 0:
+            raise ValueError("slot pools must be non-empty")
+        self.client_indices[int(slot)] = idx
+
     def real_counts(self, b) -> np.ndarray:
         """Per-client real (unpadded) sample count: min(b_i, |pool_i|)."""
         pools = np.asarray([len(p) for p in self.client_indices])

@@ -32,7 +32,8 @@ def _kernel(p_ref, g_ref, s_ref, k_ref, w_ref, o_ref, *, gamma: float):
     spec = p - gamma * g
     w = w_ref[...]                                         # [N, 1]
     cnt = w.sum()
-    common = (spec * w).sum(axis=0, keepdims=True) / jnp.maximum(cnt, 1.0)
+    # where, not maximum: fractional staleness weights may sum below 1
+    common = (spec * w).sum(axis=0, keepdims=True) / jnp.where(cnt > 0, cnt, 1.0)
     keep = k_ref[...] > 0                                  # [N, 1]
     use_common = jnp.logical_and(jnp.logical_not(jnp.any(keep)), cnt > 0)
     fallback = jnp.where(use_common,

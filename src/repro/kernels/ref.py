@@ -66,7 +66,9 @@ def clip_sgd_ref(p, g, scale, keep_spec, participation=None, *, gamma: float):
                          jnp.broadcast_to(common[None], p.shape))
     w = participation.astype(spec.dtype).reshape(-1, 1)
     cnt = participation.astype(spec.dtype).sum()
-    common = (spec * w).sum(axis=0) / jnp.maximum(cnt, 1.0)
+    # where, not maximum: fractional staleness weights may sum below 1
+    # (traffic plane) — dividing by max(cnt, 1) would shrink the mean
+    common = (spec * w).sum(axis=0) / jnp.where(cnt > 0, cnt, 1.0)
     # A drop-everyone round has no survivor mean: every client (and the
     # server-common replicas) holds params.  `keep` is already
     # keep_spec && part, so any(keep) distinguishes "non-agg round with

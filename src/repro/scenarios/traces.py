@@ -248,6 +248,22 @@ class Scenario:
         self._generate(t)
         return self._history[t].available
 
+    def multipliers_at(self, t: int) -> Dict[str, np.ndarray]:
+        """field -> [N] multiplier (round-t fields over the base pool).
+
+        The traffic plane composes scenarios with *per-user* device
+        profiles: each slot's round-t resources are the slot's own base
+        profile times the scenario's round-t multiplier (slot i inherits
+        trace lane i), so churn-admitted users still ride the same
+        diurnal/outage processes the fixed-cohort runs see.
+        """
+        self._generate(t)
+        rec = self._history[t]
+        return {
+            f: rec.fields[f] / np.maximum(self._base[f], 1e-300)
+            for f in FIELDS
+        }
+
     def field_history(self, field_name: str, rounds: int) -> np.ndarray:
         """[rounds+1, N] trajectory of one profile field (round 0 first)."""
         self._generate(rounds)

@@ -1,0 +1,31 @@
+"""Streaming traffic plane (DESIGN.md §14).
+
+Event-driven arrivals over a million-user population, a resizable
+slot store on the scan engine's stacked state, and semi-async
+staleness-weighted rounds — `TrafficPlane` ties the three together.
+"""
+from repro.traffic.events import KINDS, EventLog, EventQueue
+from repro.traffic.plane import TrafficPlane
+from repro.traffic.population import Population, TrafficSpec, staleness_weight
+from repro.traffic.store import (
+    DUMMY_BATCH,
+    SlotClientStore,
+    dummy_pool,
+    live_mean,
+    write_slot,
+)
+
+__all__ = [
+    "KINDS",
+    "EventLog",
+    "EventQueue",
+    "TrafficPlane",
+    "Population",
+    "TrafficSpec",
+    "staleness_weight",
+    "DUMMY_BATCH",
+    "SlotClientStore",
+    "dummy_pool",
+    "live_mean",
+    "write_slot",
+]

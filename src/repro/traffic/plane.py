@@ -1,0 +1,258 @@
+"""The traffic plane: semi-async rounds over a live user population.
+
+`TrafficPlane` sits between the population model and the scan engine
+(DESIGN.md §14).  It owns the virtual clock, the event queue, and the
+per-slot session state; the simulator's segment scheduler asks it for
+
+- ``plan_segment`` — walk the event timeline across a segment of server
+  rounds and return the ``[R, capacity]`` float32 *staleness-weight
+  plan* that rides the existing participation-vector lane into
+  `split.hasfl_round_update` (weight 0 = slot contributed nothing this
+  round, fractional = stale delivery down-weighted by
+  ``w(tau) = 1/(1+tau)^alpha``);
+- ``apply_boundary`` — admit/evict users by slot surgery between scan
+  dispatches (pool rebind + parameter row write), which never changes
+  an array shape and therefore never recompiles the scan executable.
+
+Semi-async semantics: every live slot computes continuously at its own
+pace (per-client unbarriered durations from
+`LatencyModel.per_client_round`); the server closes round ``r`` after
+``max(1, ceil(buffer_frac * n_live))`` update *deliveries* (FedBuff-
+style buffered aggregation — counting deliveries rather than distinct
+slots cannot livelock when one fast slot keeps delivering while the
+rest sit in an outage).  A delivery's staleness ``tau`` is the number
+of server rounds closed since that slot last pulled; the slot pulls
+and restarts immediately after delivering.  The delivered gradient is
+computed against the slot's *held* client-side parameters and the
+*current* server-side parameters — exactly the split-learning dataflow,
+where the server-side forward/backward runs server-side at delivery
+time while the client-side sub-model is whatever the client last
+pulled.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.config import DeviceProfile
+from repro.scenarios.traces import FIELDS
+from repro.traffic.events import EventLog, EventQueue
+from repro.traffic.population import Population, TrafficSpec, staleness_weight
+from repro.traffic.store import dummy_pool, live_mean, write_slot
+
+
+class TrafficPlane:
+    """Event-driven scheduler for one semi-async training run.
+
+    ``capacity`` is the slot count (the simulator's N — pow2-padded by
+    the session so churn stays shape-stable); ``cohort`` caps how many
+    users may be admitted concurrently (ISSUE: the small active cohort
+    sampled from the population, <= capacity).
+    """
+
+    def __init__(self, tspec: TrafficSpec, n_train: int, cohort: int,
+                 capacity: int):
+        self.tspec = tspec.validated()
+        self.pop = Population(tspec, n_train)
+        self.cohort = int(cohort)
+        self.capacity = int(capacity)
+        if not 0 < self.cohort <= self.capacity:
+            raise ValueError(
+                f"cohort {cohort} must be in [1, capacity {capacity}]")
+        self.clock = 0.0
+        self.queue = EventQueue()
+        self.log = EventLog()
+        # per-slot session state (host-side, tiny)
+        self.live = np.zeros(self.capacity, bool)
+        self.busy = np.zeros(self.capacity, bool)
+        self.user = np.full(self.capacity, -1, np.int64)
+        self.last_sync = np.zeros(self.capacity, np.int64)
+        self.t_done = np.full(self.capacity, np.inf)
+        self.base_profile: list = [None] * self.capacity
+        self._fallback: Optional[list] = None       # construction-time pool
+        self._pending_admit: list = []              # [(uid, dwell)]
+        self._pending_evict: list = []              # [(slot, uid)]
+        self._round = 0
+
+    # -- wiring ---------------------------------------------------------
+
+    def attach(self, sim, scenario=None) -> None:
+        """Bind to a scan-engine simulator and admit the initial cohort."""
+        if sim.engine != "scan":
+            raise ValueError("traffic mode needs engine='scan'")
+        if sim.fault_mode != "soft":
+            raise ValueError(
+                "traffic mode owns its own fault semantics — the simulator "
+                "must run fault_mode='soft'")
+        if sim.n != self.capacity:
+            raise ValueError(
+                f"simulator has {sim.n} slots but the plane expects "
+                f"capacity {self.capacity}")
+        if scenario is not None and scenario.n != self.capacity:
+            raise ValueError(
+                f"scenario models {scenario.n} lanes but the plane expects "
+                f"capacity {self.capacity}")
+        self._fallback = list(sim.devices)
+        self._pending_admit.extend(self.pop.initial_cohort(self.cohort))
+        self.apply_boundary(sim, 0)
+
+    def live_mask(self) -> np.ndarray:
+        return self.live.copy()
+
+    def effective_batches(self, b) -> np.ndarray:
+        """Per-slot batch plan: the policy's b_i on live slots, the
+        1-sample dummy batch on empty ones (finite grads at weight 0)."""
+        return np.where(self.live, np.asarray(b, int), 1)
+
+    # -- environment injection ------------------------------------------
+
+    def inject_profiles(self, sim, scenario, t: int) -> None:
+        """Install round ``t``'s per-slot device pool into the simulator.
+
+        Slot i's resources = its admitted user's base profile (the
+        construction pool for empty slots) times the scenario's round-t
+        multiplier on lane i — churn-admitted users ride the same trace
+        processes the fixed-cohort runs see.
+        """
+        mult = scenario.multipliers_at(t) if scenario is not None else None
+        profiles = []
+        for i in range(self.capacity):
+            base = self.base_profile[i] or self._fallback[i]
+            if mult is None:
+                profiles.append(base)
+            else:
+                profiles.append(DeviceProfile(**{
+                    f: float(getattr(base, f) * mult[f][i]) for f in FIELDS
+                }))
+        sim.set_devices(profiles)
+
+    # -- event walk ------------------------------------------------------
+
+    def _step_external(self) -> float:
+        """Process the earliest queued departure or population arrival;
+        returns that event's absolute time."""
+        if self.queue.peek_time() <= self.pop.peek_arrival():
+            t_ev, kind, payload = self.queue.pop()
+            if kind == "depart":
+                slot, uid = payload
+                if self.live[slot] and self.user[slot] == uid:
+                    self._depart(t_ev, slot, uid)
+            return t_ev
+        t_ar, uid, dwell = self.pop.next_arrival()
+        self.log.append(t_ar, self._round, "arrival", user=uid)
+        if len(self._pending_admit) + int(self.live.sum()) < self.cohort:
+            self._pending_admit.append((uid, dwell))
+        return t_ar
+
+    def _depart(self, t_ev: float, slot: int, uid: int) -> None:
+        self.log.append(t_ev, self._round, "depart", slot=slot, user=uid)
+        self.live[slot] = False
+        self.busy[slot] = False
+        self.t_done[slot] = np.inf
+        self.user[slot] = -1
+        self._pending_evict.append((slot, uid))
+
+    def plan_segment(self, sim, scenario, t0: int, nxt: int,
+                     b_eff, cuts) -> np.ndarray:
+        """Walk rounds (t0, nxt] on the virtual clock.
+
+        Returns the ``[nxt - t0, capacity]`` staleness-weight plan the
+        scan consumes as its participation input.  Mutates the plane's
+        clock/slot state and the simulator's injected device pool (the
+        last injected state is round ``nxt``'s — what a reconfiguration
+        policy firing at the boundary should observe).
+        """
+        alpha = self.tspec.staleness_alpha
+        R = nxt - t0
+        plan = np.zeros((R, self.capacity), np.float32)
+        for k in range(R):
+            r = t0 + k + 1
+            self._round = r
+            self.inject_profiles(sim, scenario, r)
+            dur = sim.lat.per_client_round(b_eff, cuts)
+            # launch every idle live slot (fresh admits after a boundary;
+            # within a segment deliverers restart themselves)
+            start = self.live & ~self.busy
+            self.busy |= start
+            self.t_done[start] = self.clock + dur[start]
+
+            delivered = 0
+            while True:
+                n_live = int(self.live.sum())
+                if n_live == 0:
+                    if delivered:
+                        break          # close the round on what arrived
+                    # nobody can deliver: the server idles until an
+                    # arrival is waiting for the next admission boundary
+                    # and closes the round empty at that instant (the
+                    # clock never moves backwards — a backlogged past
+                    # arrival admits "now")
+                    while not self._pending_admit:
+                        self.clock = max(self.clock, self._step_external())
+                    break
+                k_target = max(
+                    1, math.ceil(self.tspec.buffer_frac * n_live))
+                if delivered >= k_target:
+                    break
+                t_next = float(np.min(self.t_done[self.busy])) \
+                    if self.busy.any() else np.inf
+                t_ext = min(self.queue.peek_time(), self.pop.peek_arrival())
+                if t_ext < t_next:
+                    # external events advance the clock too (a departure
+                    # observed at t means time reached t); deliveries
+                    # below stay monotone because externals only run
+                    # while t_ext < the next delivery time
+                    self.clock = max(self.clock, self._step_external())
+                    continue
+                i = int(np.argmin(np.where(self.busy, self.t_done, np.inf)))
+                self.clock = float(self.t_done[i])
+                tau = max(0, (r - 1) - int(self.last_sync[i]))
+                plan[k, i] = staleness_weight(tau, alpha)
+                delivered += 1
+                self.last_sync[i] = r
+                self.log.append(self.clock, r, "deliver", slot=i,
+                                user=int(self.user[i]))
+                # pull fresh params and restart at this round's duration
+                self.t_done[i] = self.clock + dur[i]
+            self.log.append(self.clock, r, "round")
+        return plan
+
+    # -- boundary slot surgery ------------------------------------------
+
+    def apply_boundary(self, sim, t: int) -> None:
+        """Admit/evict between scan dispatches (host-side, shape-stable).
+
+        Evicted slots get the dummy pool back; admitted users get their
+        derived shard + base profile, and their parameter row is set to
+        the *pre-admit* live mean — the aggregate model a joining client
+        downloads (the init broadcast when nothing is live yet).
+        """
+        for slot, uid in self._pending_evict:
+            sim.store.set_pool(slot, dummy_pool())
+            self.base_profile[slot] = None
+            self.log.append(self.clock, t, "evict", slot=slot, user=uid)
+        self._pending_evict.clear()
+
+        if not self._pending_admit:
+            return
+        free = [i for i in range(self.capacity) if not self.live[i]]
+        take = min(len(free),
+                   self.cohort - int(self.live.sum()),
+                   len(self._pending_admit))
+        if take <= 0:
+            return
+        pulled = live_mean(sim._stacked, self.live)
+        for slot in free[:take]:
+            uid, dwell = self._pending_admit.pop(0)
+            sim._stacked = write_slot(sim._stacked, slot, pulled)
+            sim.store.set_pool(slot, self.pop.user_shard(uid))
+            self.base_profile[slot] = self.pop.user_profile(uid)
+            self.live[slot] = True
+            self.busy[slot] = False
+            self.t_done[slot] = np.inf
+            self.last_sync[slot] = t
+            self.user[slot] = uid
+            self.queue.push(self.clock + dwell, "depart", (slot, uid))
+            self.log.append(self.clock, t, "admit", slot=slot, user=uid)

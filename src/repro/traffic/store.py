@@ -1,0 +1,93 @@
+"""Resizable client store: pow2-padded slots over the scan data plane.
+
+`SlotClientStore` completes the PR 7 participation-vector data plane
+(DESIGN.md §14): the stacked ``[N, ...]`` state is sized to a fixed
+pow2 slot *capacity*, clients are admitted/evicted by rebinding a
+slot's data pool (`DeviceClientStore.set_pool` / `clear_pool`) and
+writing parameters into the slot row — every array shape the jitted
+scan observes (stacked leaves, gather plans, row masks, weight plans)
+is a function of the capacity alone, so cohort churn never recompiles
+the scan executable (recompile-count bound in tests/test_traffic.py).
+
+Empty slots are not holes: they carry the 1-sample dummy pool and a
+batch of 1, so their per-round gradient is *finite* (a masked-out NaN
+would still poison the weighted survivor mean through ``0 * NaN``), and
+their aggregation weight is exactly 0.0 — they contribute nothing and
+hold (or track the broadcast of) their parameters until re-admission.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DeviceClientStore
+
+# every empty slot trains on this many real samples (weight 0 — the
+# update is discarded; >=1 keeps the per-slot loss/grad finite)
+DUMMY_BATCH = 1
+
+
+def dummy_pool() -> np.ndarray:
+    """The empty slot's data pool: sample 0, batch of 1."""
+    return np.zeros(DUMMY_BATCH, np.int64)
+
+
+class SlotClientStore(DeviceClientStore):
+    """A `DeviceClientStore` whose N axis is slot capacity, not cohort.
+
+    Construction binds every slot to the dummy pool; the traffic plane
+    admits users by `set_pool(slot, user_shard)` and evicts by
+    `clear_pool(slot)`.  All gather-plan/row-mask machinery is inherited
+    unchanged — the scan engine cannot tell a slot store from a fixed
+    cohort store (which is the point).
+    """
+
+    def __init__(self, arrays: dict, n_slots: int,
+                 rng: np.random.Generator):
+        super().__init__(
+            arrays, [dummy_pool() for _ in range(int(n_slots))], rng)
+
+    @classmethod
+    def from_sampler(cls, sampler) -> "SlotClientStore":
+        """Adopt a sampler already built with slot-dummy pools (shares
+        arrays and the RNG object, like the base class)."""
+        store = cls.__new__(cls)
+        DeviceClientStore.__init__(
+            store, sampler.arrays, sampler.client_indices, sampler.rng)
+        return store
+
+
+# -- stacked-state slot surgery (host-side, between scan dispatches) -------
+
+def write_slot(stacked: list, slot: int, values: list) -> list:
+    """Functionally write one client's unit values into slot ``slot``.
+
+    ``stacked`` is the simulator's list of [N, ...]-stacked unit trees;
+    ``values`` a matching list of *unstacked* unit trees (e.g. the live
+    mean from `live_mean` — what an admitted client downloads).  Shapes
+    are untouched, so downstream executables stay cached.
+    """
+    slot = int(slot)
+    return [
+        jax.tree_util.tree_map(
+            lambda a, v: a.at[slot].set(jnp.asarray(v, a.dtype)), u, vu)
+        for u, vu in zip(stacked, values)
+    ]
+
+
+def live_mean(stacked: list, live: np.ndarray) -> list:
+    """Unweighted mean of every unit over the live slots — the aggregate
+    model a joining client pulls (falls back to the all-slot mean when
+    nothing is live: every slot then still tracks the last broadcast)."""
+    live = np.asarray(live, bool)
+    if live.all() or not live.any():
+        return [
+            jax.tree_util.tree_map(lambda a: a.mean(axis=0), u)
+            for u in stacked
+        ]
+    sel = jnp.asarray(np.flatnonzero(live))
+    return [
+        jax.tree_util.tree_map(lambda a: a[sel].mean(axis=0), u)
+        for u in stacked
+    ]

@@ -47,7 +47,7 @@ def as_leaf_dtype(arr: np.ndarray, dtype) -> np.ndarray:
     return arr.astype(dtype)
 
 
-def _atomic_savez(path: str, arrays: dict) -> None:
+def atomic_savez(path: str, arrays: dict) -> None:
     tmp = path + ".tmp"
     # write through a file object — np.savez would append ".npz" to a
     # bare tmp filename and break the rename
@@ -56,7 +56,7 @@ def _atomic_savez(path: str, arrays: dict) -> None:
     os.replace(tmp, path)
 
 
-def _atomic_json(path: str, obj: dict) -> None:
+def atomic_json(path: str, obj: dict) -> None:
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(obj, f)
@@ -89,8 +89,8 @@ def save_checkpoint(path: str, tree, step: int = 0) -> None:
     os.makedirs(path, exist_ok=True)
     leaves, treedef = _flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    _atomic_savez(os.path.join(path, f"ckpt_{step}.npz"), arrays)
-    _atomic_json(
+    atomic_savez(os.path.join(path, f"ckpt_{step}.npz"), arrays)
+    atomic_json(
         os.path.join(path, f"ckpt_{step}.json"),
         {"treedef": str(treedef), "n_leaves": len(leaves), "step": step})
 
@@ -146,10 +146,10 @@ def save_snapshot(path: str, step: int, arrays: dict, meta: dict) -> None:
     meta = dict(meta)
     meta["snapshot_version"] = SNAPSHOT_VERSION
     meta["step"] = step
-    _atomic_savez(
+    atomic_savez(
         os.path.join(path, f"snap_{step}.npz"),
         {k: np.asarray(v) for k, v in arrays.items()})
-    _atomic_json(os.path.join(path, f"snap_{step}.json"), meta)
+    atomic_json(os.path.join(path, f"snap_{step}.json"), meta)
 
 
 def latest_snapshot(path: str):

@@ -1,0 +1,299 @@
+"""Streaming traffic plane (DESIGN.md §14).
+
+Layers under test:
+
+- staleness-weight algebra: alpha=0 yields weights bitwise-equal to the
+  full-participation ones vector (so the semi-async fold degenerates to
+  the synchronous survivor mean bit-for-bit); drop-everyone holds
+  params; a lone fractional survivor renormalizes to its own spec
+  (the `jnp.where(cnt > 0, ...)` denominator — the old ``max(cnt, 1)``
+  would shrink it), while integer 0/1 participation keeps the exact
+  historical denominator (the traffic=None bitwise gate at the algebra
+  level);
+- population determinism: seeded arrival streams and per-uid derived
+  profiles/shards;
+- the event log's atomic npz+marker persistence;
+- spec integration: validation, JSON round-trip, refuse-to-stack;
+- end-to-end: a tiny semi-async run advances clock/loss, churns slots
+  through admit/evict, and keeps the scan engine at ONE executable
+  across cohort churn (the recompile-count bound, as in
+  tests/test_scan_engine.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, Session, TrafficSpec
+from repro.config import SFLConfig
+from repro.core import split as SP
+from repro.kernels.ref import clip_sgd_ref
+from repro.traffic import (
+    EventLog,
+    Population,
+    dummy_pool,
+    staleness_weight,
+)
+
+GAMMA = 0.1
+TIGHT = dict(rtol=1e-5, atol=1e-6)
+
+
+def _toy(n=4, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    stacked = [
+        {"w": jnp.asarray(rng.normal(size=(n, d)), jnp.float32)}
+        for _ in range(2)
+    ]
+    grads = [
+        {"w": jnp.asarray(rng.normal(size=(n, d)), jnp.float32)}
+        for _ in range(2)
+    ]
+    masks = jnp.asarray([1.0, 0.0])      # unit 0 client-specific, 1 common
+    return stacked, grads, masks
+
+
+def _update(stacked, grads, masks, do_agg, part):
+    out = SP.hasfl_round_update(
+        stacked, grads, masks, jnp.asarray(do_agg), GAMMA,
+        participation=None if part is None
+        else jnp.asarray(part, jnp.float32))
+    return [np.asarray(u["w"]) for u in out]
+
+
+# ---------------------------------------------------------------------------
+# staleness-weight algebra
+# ---------------------------------------------------------------------------
+
+def test_staleness_weight_shape():
+    assert staleness_weight(0, 0.5) == 1.0
+    assert staleness_weight(3, 0.0) == 1.0
+    w = [staleness_weight(t, 0.7) for t in range(6)]
+    assert all(a > b for a, b in zip(w, w[1:]))      # strictly decaying
+    assert staleness_weight(1, 1.0) == 0.5
+    assert staleness_weight(-2, 0.9) == 1.0          # tau clamped at 0
+
+
+def test_alpha_zero_is_synchronous_mean_bitwise():
+    """alpha=0 makes every delivery weight exactly 1.0, so the weight
+    vector is bitwise the full-participation ones vector and the whole
+    fold — same op sequence — degenerates to the synchronous survivor
+    mean bit-for-bit, on both agg and non-agg rounds."""
+    stacked, grads, masks = _toy()
+    w = np.asarray([staleness_weight(t, 0.0) for t in range(4)], np.float32)
+    np.testing.assert_array_equal(w, np.ones(4, np.float32))
+    for do_agg in (False, True):
+        a = _update(stacked, grads, masks, do_agg, w)
+        b = _update(stacked, grads, masks, do_agg, np.ones(4, np.float32))
+        for u in range(2):
+            np.testing.assert_array_equal(a[u], b[u])
+
+
+def test_drop_everyone_holds_params_under_staleness_weights():
+    stacked, grads, masks = _toy()
+    part = np.zeros(4, np.float32)
+    for do_agg in (False, True):
+        out = _update(stacked, grads, masks, do_agg, part)
+        for u in range(2):
+            np.testing.assert_array_equal(out[u], np.asarray(stacked[u]["w"]))
+
+
+def test_lone_fractional_survivor_renormalizes_to_spec():
+    """A single deliverer at staleness weight 0.3 must produce *its*
+    spec as the common mean ((0.3 x)/0.3), not 0.3 x — the regression
+    the ``jnp.where(cnt > 0, cnt, 1)`` denominator fix exists for (the
+    old ``max(cnt, 1)`` divides the 0.3-weighted sum by 1)."""
+    stacked, grads, masks = _toy()
+    part = np.asarray([0.0, 0.3, 0.0, 0.0], np.float32)
+    spec = np.asarray(stacked[1]["w"]) - GAMMA * np.asarray(grads[1]["w"])
+    out = _update(stacked, grads, masks, False, part)
+    np.testing.assert_allclose(
+        out[1], np.broadcast_to(spec[1], out[1].shape), **TIGHT)
+
+    # and through the kernels.ref dispatch oracle
+    p = jnp.asarray(np.asarray(stacked[1]["w"]))
+    g = jnp.asarray(np.asarray(grads[1]["w"]))
+    ref = clip_sgd_ref(
+        p, g, jnp.ones(4), jnp.zeros(4, bool),
+        jnp.asarray(part), gamma=GAMMA)
+    np.testing.assert_allclose(
+        np.asarray(ref), np.broadcast_to(spec[1], ref.shape), **TIGHT)
+
+
+def test_integer_participation_denominator_unchanged():
+    """The traffic=None bitwise gate at the algebra level: for every 0/1
+    participation vector the new ``where(cnt > 0, cnt, 1)`` denominator
+    equals the historical ``maximum(cnt, 1)`` exactly, so pre-PR
+    dropout/deadline runs reproduce bit-for-bit."""
+    for bits in range(16):
+        w = jnp.asarray([(bits >> i) & 1 for i in range(4)], jnp.float32)
+        cnt = w.sum()
+        np.testing.assert_array_equal(
+            np.asarray(jnp.where(cnt > 0, cnt, 1.0)),
+            np.asarray(jnp.maximum(cnt, 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# population model
+# ---------------------------------------------------------------------------
+
+def test_population_streams_are_seeded_and_lazy():
+    ts = TrafficSpec(n_users=1_000_000, arrival_rate=0.5, mean_dwell=10.0,
+                     seed=5)
+    a, b = Population(ts, n_train=200), Population(ts, n_train=200)
+    ev_a = [a.next_arrival() for _ in range(50)]
+    ev_b = [b.next_arrival() for _ in range(50)]
+    assert ev_a == ev_b
+    times = [t for t, _, _ in ev_a]
+    assert all(t1 > t0 for t0, t1 in zip(times, times[1:]))
+    assert all(0 <= u < ts.n_users for _, u, _ in ev_a)
+    assert all(d > 0 for _, _, d in ev_a)
+
+
+def test_population_per_user_state_is_uid_keyed():
+    ts = TrafficSpec(shard_size=30, seed=9)
+    pop = Population(ts, n_train=500)
+    p1, p2 = pop.user_profile(1234), pop.user_profile(1234)
+    assert p1 == p2                                    # derived, not drawn
+    assert pop.user_profile(1235) != p1
+    s1 = pop.user_shard(42)
+    np.testing.assert_array_equal(s1, pop.user_shard(42))
+    assert len(s1) == 30 and len(np.unique(s1)) == 30
+    assert s1.min() >= 0 and s1.max() < 500
+    # consuming arrivals must not disturb per-uid derivations
+    pop.next_arrival()
+    np.testing.assert_array_equal(s1, pop.user_shard(42))
+
+
+def test_traffic_spec_validation():
+    with pytest.raises(ValueError):
+        TrafficSpec(arrival_rate=0.0).validated()      # deadlock guard
+    with pytest.raises(ValueError):
+        TrafficSpec(buffer_frac=0.0).validated()
+    with pytest.raises(ValueError):
+        TrafficSpec(buffer_frac=1.5).validated()
+    with pytest.raises(ValueError):
+        TrafficSpec(staleness_alpha=-0.1).validated()
+    with pytest.raises(ValueError):
+        TrafficSpec(shard_size=0).validated()
+    TrafficSpec().validated()
+
+
+# ---------------------------------------------------------------------------
+# event log persistence
+# ---------------------------------------------------------------------------
+
+def test_event_log_roundtrip_and_marker(tmp_path):
+    log = EventLog()
+    log.append(0.5, 1, "admit", slot=2, user=77)
+    log.append(1.5, 1, "deliver", slot=2, user=77)
+    log.append(2.0, 2, "round")
+    path = str(tmp_path / "events")
+    log.save(path)
+    back = EventLog.load(path)
+    assert back.time == log.time and back.kind == log.kind
+    assert back.slot == log.slot and back.user == log.user
+    assert back.counts()["deliver"] == 1
+    with pytest.raises(ValueError):
+        log.append(3.0, 2, "teleport")
+    # no marker -> unreadable (the crash-safety contract)
+    (tmp_path / "events.json").unlink()
+    with pytest.raises(FileNotFoundError):
+        EventLog.load(path)
+
+
+# ---------------------------------------------------------------------------
+# spec integration
+# ---------------------------------------------------------------------------
+
+def _traffic_spec(**kw):
+    t = dict(n_users=500, arrival_rate=300.0, mean_dwell=0.02,
+             buffer_frac=0.5, staleness_alpha=0.5, shard_size=40, seed=3)
+    t.update(kw.pop("tspec", {}))
+    base = dict(
+        arch="vgg9-cifar-small", n_clients=3, partition="iid",
+        n_train=180, n_test=60, rounds=6, eval_every=3,
+        reconfigure_every=3, policy="fixed",
+        sfl=SFLConfig(agg_interval=3, lr=0.05),
+        traffic=TrafficSpec(**t),
+    )
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def test_spec_traffic_validation_and_roundtrip():
+    spec = _traffic_spec().validated()
+    assert spec.grid_key() is None                     # refuse-to-stack
+    assert spec.replace(traffic=None).grid_key() is not None
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec and isinstance(back.traffic, TrafficSpec)
+    with pytest.raises(ValueError):
+        _traffic_spec(engine="vectorized").validated()
+    with pytest.raises(ValueError):
+        _traffic_spec(fault_mode="dropout").validated()
+    with pytest.raises(ValueError):
+        _traffic_spec(checkpoint_every=2,
+                      checkpoint_dir="/tmp/x").validated()
+    with pytest.raises(ValueError):
+        _traffic_spec(n_clients=65).validated()
+    with pytest.raises(ValueError):
+        _traffic_spec(tspec=dict(arrival_rate=0.0)).validated()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: churn without recompiles
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def churny_run():
+    """One tiny semi-async run with arrival/dwell scales matched to the
+    model's (sub-second) virtual round times, so admits, departs, and
+    evictions all actually fire within 6 rounds."""
+    sess = Session(_traffic_spec())
+    res = sess.run()
+    return sess, res
+
+
+def test_traffic_run_trains_and_advances_clock(churny_run):
+    sess, res = churny_run
+    assert len(res.clock) == 2                         # evals at 3 and 6
+    assert 0 < res.clock[0] < res.clock[1] < np.inf
+    assert np.all(np.isfinite(res.train_loss))
+    counts = sess.plane.log.counts()
+    assert counts["deliver"] > 0
+    assert counts["round"] == 6
+    assert int(sess.plane.live_mask().sum()) <= sess.spec.n_clients
+    # capacity is the pow2 bucket of the cohort
+    assert sess.sim.n == 4 and sess.plane.capacity == 4
+
+
+def test_churn_keeps_one_scan_executable(churny_run):
+    """The recompile-count bound (as in tests/test_scan_engine.py): the
+    run must have churned slots — admits beyond the seed cohort and at
+    least one eviction — while every segment reuses ONE jitted scan
+    executable (slot surgery rebinds pools and rewrites parameter rows,
+    never shapes)."""
+    sess, res = churny_run
+    counts = sess.plane.log.counts()
+    assert counts["admit"] > sess.spec.n_clients       # churned in
+    assert counts["evict"] > 0                         # churned out
+    cache_size = getattr(sess.sim._scan_fn, "_cache_size", None)
+    if cache_size is None:
+        pytest.skip("jit cache size introspection unavailable")
+    assert cache_size() == 1
+
+
+def test_traffic_run_is_deterministic():
+    spec = _traffic_spec(rounds=3, eval_every=3)
+    r1 = Session(spec).run()
+    s2 = Session(spec)
+    r2 = s2.run()
+    assert r1.clock == r2.clock
+    assert r1.train_loss == r2.train_loss
+    assert r1.test_loss == r2.test_loss
+
+
+def test_dummy_pool_is_nonempty_and_store_guard():
+    assert len(dummy_pool()) == 1
+    sess = Session(_traffic_spec(rounds=3))
+    with pytest.raises(ValueError):
+        sess.sim.store.set_pool(0, np.asarray([], np.int64))
