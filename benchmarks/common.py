@@ -322,10 +322,12 @@ def runner_id() -> str:
 # empty, figure-lane rows leave the engine ms/ratio columns empty, and
 # the perf gate treats ``wall_s`` as warn-only (figure walls swing with
 # cell counts and CI tenancy; the hard gate stays on the engine ratios).
+# ``peak_mem_mb`` (mesh N-scaling rows, DESIGN.md §15) extends the
+# schema again — same append-LAST prefix migration.
 SIM_SPEED_HEADER = [
     "config", "n_clients", "loop_ms", "vectorized_ms", "scan_ms",
     "vec_speedup", "scan_speedup", "git_sha", "timestamp",
-    "runner_id", "harness", "figure", "wall_s"
+    "runner_id", "harness", "figure", "wall_s", "peak_mem_mb"
 ]
 
 
@@ -342,7 +344,7 @@ def record_figure_walls(walls, *, quick=False, out_dir=None) -> None:
     suffix = "-quick" if quick else ""
     rows = [
         [f"fig-{name}{suffix}", "", "", "", "", "", "",
-         sha, ts, rid, HARNESS, name, round(wall, 1)]
+         sha, ts, rid, HARNESS, name, round(wall, 1), ""]
         for name, wall in walls
     ]
     append_csv(out, SIM_SPEED_HEADER, rows)

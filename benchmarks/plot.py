@@ -1,0 +1,160 @@
+"""Error-band figure plots from the committed bench CSVs.
+
+The figure drivers commit per-seed rows plus a ``seed="mean"`` row per
+eval point whose trailing ``<col>_std/_min/_max`` columns carry the
+seed spread (`common.band_cols` / `common.seed_curve_rows`).  This
+driver turns those into the actual paper-style plots: the mean line
+with a shaded ±std band (falling back to the min/max envelope when the
+std column is empty), or error-barred bars for the scalar summaries.
+
+matplotlib is an *optional* dependency — absent, the driver prints a
+skip notice and exits 0, so the CI figures lane can always invoke it.
+Stale CSVs written before the band schema (no ``seed`` column, or no
+mean rows) are skipped per-file with a notice, never an error: plots
+cover whatever the trajectory already has.
+
+    PYTHONPATH=src python benchmarks/plot.py [--out-dir experiments/bench]
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+
+# figure -> how to read its CSV: ``x`` the x-axis column (None = bar
+# chart over the line labels), ``lines`` the label columns a line/bar
+# groups on, ``y`` the value column the band columns attach to.
+FIGURES = {
+    "fig2a": dict(x="round", lines=["series"], y="acc"),
+    "fig3a": dict(x="round", lines=["series"], y="acc"),
+    "fig5_curves": dict(x="round", lines=["setting", "policy"], y="acc"),
+    "fig6_summary": dict(x=None, lines=["setting", "policy"],
+                         y="final_acc"),
+    "fig7b_sim": dict(x="server_scale", lines=["policy"],
+                      y="converged_time_s"),
+    "fig9_sim": dict(x="n_devices", lines=["policy"],
+                     y="converged_time_s"),
+    "fig10_11": dict(x=None, lines=["figure", "setting", "scheme"],
+                     y="final_acc"),
+}
+
+
+def _float(s):
+    try:
+        return float(s)
+    except (TypeError, ValueError):
+        return None
+
+
+def read_mean_rows(path: str, spec: dict):
+    """``label -> sorted [(x, y, std, lo, hi)]`` from the mean rows.
+
+    Returns None (with a reason printed) when the CSV predates the band
+    schema — no ``seed`` column or no ``seed="mean"`` rows to plot.
+    """
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    if not rows or "seed" not in rows[0]:
+        return None, "no seed column (pre-band schema)"
+    y = spec["y"]
+    series: dict = {}
+    for row in rows:
+        if row.get("seed") != "mean":
+            continue
+        label = "/".join(row[c] for c in spec["lines"])
+        val = _float(row.get(y))
+        if val is None:
+            continue
+        x = _float(row.get(spec["x"])) if spec["x"] else None
+        std = _float(row.get(f"{y}_std"))
+        lo = _float(row.get(f"{y}_min"))
+        hi = _float(row.get(f"{y}_max"))
+        series.setdefault(label, []).append((x, val, std, lo, hi))
+    if not series:
+        return None, "no seed=mean rows (single-seed or pre-band run)"
+    for pts in series.values():
+        if spec["x"]:
+            pts.sort(key=lambda p: p[0])
+    return series, None
+
+
+def plot_figure(plt, name: str, spec: dict, series: dict, out: str) -> None:
+    fig, ax = plt.subplots(figsize=(6, 4))
+    if spec["x"] is None:
+        labels = sorted(series)
+        vals = [series[k][0][1] for k in labels]
+        errs = [series[k][0][2] or 0.0 for k in labels]
+        ax.bar(range(len(labels)), vals, yerr=errs, capsize=3)
+        ax.set_xticks(range(len(labels)))
+        ax.set_xticklabels(labels, rotation=45, ha="right", fontsize=7)
+    else:
+        for label in sorted(series):
+            pts = series[label]
+            xs = [p[0] for p in pts]
+            ys = [p[1] for p in pts]
+            ax.plot(xs, ys, marker="o", markersize=3, label=label)
+            # ±std band; min/max envelope when std is empty
+            if all(p[2] is not None for p in pts):
+                lo = [p[1] - p[2] for p in pts]
+                hi = [p[1] + p[2] for p in pts]
+            elif all(p[3] is not None and p[4] is not None for p in pts):
+                lo = [p[3] for p in pts]
+                hi = [p[4] for p in pts]
+            else:
+                lo = hi = None
+            if lo is not None:
+                ax.fill_between(xs, lo, hi, alpha=0.2)
+        ax.set_xlabel(spec["x"])
+        ax.legend(fontsize=7)
+    ax.set_ylabel(spec["y"])
+    ax.set_title(name)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    plt.close(fig)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", dest="out_dir",
+                    default=os.environ.get("BENCH_OUT", "experiments/bench"))
+    ap.add_argument("--plots-dir", dest="plots_dir", default=None)
+    ap.add_argument("figures", nargs="*",
+                    help=f"subset to plot (default: all of {sorted(FIGURES)})")
+    args = ap.parse_args()
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("plot.py: matplotlib not installed; skipping (exit 0)")
+        return 0
+
+    names = args.figures or sorted(FIGURES)
+    unknown = [n for n in names if n not in FIGURES]
+    if unknown:
+        print(f"plot.py: unknown figures {unknown}; "
+              f"known: {sorted(FIGURES)}", file=sys.stderr)
+        return 1
+    plots_dir = args.plots_dir or os.path.join(args.out_dir, "plots")
+    os.makedirs(plots_dir, exist_ok=True)
+    made = 0
+    for name in names:
+        path = os.path.join(args.out_dir, f"{name}.csv")
+        if not os.path.exists(path):
+            print(f"plot.py: {name}: no {path}; skipped")
+            continue
+        series, reason = read_mean_rows(path, FIGURES[name])
+        if series is None:
+            print(f"plot.py: {name}: {reason}; skipped")
+            continue
+        out = os.path.join(plots_dir, f"{name}.png")
+        plot_figure(plt, name, FIGURES[name], series, out)
+        print(f"plot.py: wrote {out} ({len(series)} series)")
+        made += 1
+    print(f"plot.py: {made}/{len(names)} figures plotted")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -242,6 +242,77 @@ def time_engines(factory, n: int, rounds: int, repeats: int) -> dict:
     return {engine: float(np.min(per[engine])) * 1e3 for engine in ENGINES}
 
 
+def _peak_mem_mb(sim) -> float:
+    """Per-device peak memory in MB, best effort.
+
+    Real accelerator backends expose ``memory_stats()['peak_bytes_in_use']``;
+    the CPU backend (and forced host devices) does not, so fall back to
+    the resident carry's bytes divided across the mesh — the quantity the
+    cohort bank is supposed to hold constant as logical N grows.
+    """
+    import jax
+
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        if stats and "peak_bytes_in_use" in stats:
+            return stats["peak_bytes_in_use"] / 1e6
+    except Exception:
+        pass
+    leaves = jax.tree_util.tree_leaves(sim._stacked)
+    mesh = getattr(sim, "_device_mesh", None)
+    d = mesh.size if mesh is not None else 1
+    return sum(x.nbytes for x in leaves) / d / 1e6
+
+
+def run_mesh_rows(args, sha: str, ts: str, rid: str) -> list:
+    """``--mesh`` N-scaling rows (DESIGN.md §15).
+
+    Logical N = the cohort bank's population; the resident cohort (and
+    so the carry and the per-device footprint) stays fixed, which is the
+    point the ``peak_mem_mb`` column exists to witness.  ``scan_ms`` is
+    ms/round of the sharded scan engine; the other engine columns stay
+    empty (there is no legacy/vectorized mesh path to compare).
+    """
+    import jax
+
+    from repro.api import ExperimentSpec, Session
+    from repro.config import SFLConfig
+    from repro.mesh.spec import MeshSpec
+
+    d = len(jax.devices())
+    resident = 8
+    n_edges = 8           # whole edges per shard for every d in {1,2,4,8}
+    populations = [16, 64] if args.quick else [16, 256, 1024]
+    rounds = 4 if args.quick else 8
+    rows = []
+    for pop in populations:
+        spec = ExperimentSpec(
+            arch="vgg9-cifar-small", n_clients=resident, partition="iid",
+            n_train=256, n_test=64, seed=0, policy="fixed(b=8,cut=4)",
+            estimate=False, rounds=rounds, eval_every=10_000,
+            reconfigure_every=10_000,
+            sfl=SFLConfig(n_devices=resident, agg_interval=4, lr=0.05),
+            mesh=MeshSpec(n_edges=n_edges, population=pop),
+        )
+        sess = Session(spec)
+        t0 = time.time()
+        sess.run()
+        wall = time.time() - t0
+        mem = _peak_mem_mb(sess.sim)
+        rows.append([
+            f"mesh-pop{pop}", pop, "", "",
+            round(wall / rounds * 1e3, 1), "", "",
+            sha, ts, rid, HARNESS, "mesh", round(wall, 1),
+            round(mem, 1),
+        ])
+        print(
+            f"mesh pop={pop:5d} resident={resident} edges={n_edges} "
+            f"devices={d}  scan {wall / rounds * 1e3:8.1f} ms/round  "
+            f"peak {mem:8.1f} MB/device", flush=True
+        )
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, nargs="*", default=[16])
@@ -256,6 +327,13 @@ def main():
         help="CI tier-1 mode: small clients/rounds, lm-tiny "
              "only — tracks the trajectory, proves nothing "
              "about absolute speed"
+    )
+    ap.add_argument(
+        "--mesh", action="store_true",
+        help="mesh N-scaling rows instead of the engine comparison: "
+             "logical population grows (cohort bank), the resident "
+             "carry stays fixed; records scan ms/round and per-device "
+             "peak memory (DESIGN.md §15)"
     )
     ap.add_argument(
         "--check-regression", action="store_true",
@@ -273,6 +351,20 @@ def main():
 
     prev = last_committed_rows(args.out)
     sha, ts, rid = git_sha(), now_iso(), runner_id()
+    if args.mesh:
+        rows = run_mesh_rows(args, sha, ts, rid)
+        append_csv(args.out, HEADER, rows)
+        if args.check_regression:
+            failures, warnings = check_regression(prev, rows)
+            if warnings:
+                print("perf gate warnings:\n  " + "\n  ".join(warnings),
+                      file=sys.stderr)
+            if failures:
+                print("PERF REGRESSION:\n  " + "\n  ".join(failures),
+                      file=sys.stderr)
+                sys.exit(1)
+            print(f"perf gate OK ({len(rows)} mesh row(s))")
+        return
     rows = []
     for n in args.clients:
         configs = [("lm-tiny", make_lm_tiny)]
@@ -304,7 +396,7 @@ def main():
                 name, n, round(ms["legacy"], 1),
                 round(ms["vectorized"], 1), round(ms["scan"], 1),
                 round(vec_speedup, 2), round(scan_speedup, 2),
-                sha, ts, rid, HARNESS, "", ""
+                sha, ts, rid, HARNESS, "", "", ""
             ])
             print(
                 f"{name:8s} N={n:3d}  loop {ms['legacy']:8.1f} ms/round  "

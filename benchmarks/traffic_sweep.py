@@ -97,7 +97,7 @@ def main(smoke: bool = False, seed: int = 0, out_dir=None) -> int:
             wall_rows.append(
                 [f"traffic-{scenario}-{mode}", spec.n_clients,
                  "", "", "", "", "", sha, ts, rid, HARNESS,
-                 "traffic", round(wall, 1)])
+                 "traffic", round(wall, 1), ""])
             if sess.plane is not None:
                 sess.plane.log.save(
                     os.path.join(out_dir, f"traffic_events_{scenario}"))

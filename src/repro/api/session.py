@@ -74,13 +74,31 @@ class Session:
         self.model = build_model(self.cfg)
         rng = np.random.default_rng(spec.seed)
         train, test, shard_labels = self._build_data(spec)
+        self._bank = None
         if spec.traffic is None:
-            if spec.partition == "iid":
+            if spec.mesh is not None and spec.mesh.population is not None:
+                # cohort-bank scale-out (DESIGN.md §15): the resident
+                # simulator holds only the active cohort; every slot's
+                # data pool is bound by the bank at attach/rotate time
+                # (the same `set_pool` surgery traffic churn uses), so
+                # the static partition over the logical population is
+                # never materialized
+                from repro.mesh.bank import CohortBank
+                from repro.traffic.store import dummy_pool
+
+                self.sampler = ClientSampler(
+                    train, [dummy_pool() for _ in range(spec.n_clients)],
+                    rng)
+                self._bank = CohortBank(
+                    spec.mesh, n_resident=spec.n_clients,
+                    n_train=spec.n_train)
+            elif spec.partition == "iid":
                 shards = partition_iid(spec.n_train, spec.n_clients, rng)
+                self.sampler = ClientSampler(train, shards, rng)
             else:
                 shards = partition_noniid_shards(
                     shard_labels, spec.n_clients, rng)
-            self.sampler = ClientSampler(train, shards, rng)
+                self.sampler = ClientSampler(train, shards, rng)
             self.sfl = spec.resolved_sfl
             n_slots = spec.n_clients
             self._plane = None
@@ -117,6 +135,8 @@ class Session:
             update_impl=spec.update_impl,
             fault_mode=spec.fault_mode,
             deadline_factor=spec.deadline_factor,
+            mesh=spec.mesh,
+            cohort_bank=self._bank,
         )
         if spec.scenario is not None:
             from repro.scenarios import make_scenario
@@ -243,6 +263,14 @@ class Session:
         state_fn = getattr(self.policy, "state_dict", None)
         if state_fn is not None:
             meta["controller"] = state_fn()
+        if self._plane is not None:
+            # traffic cells (DESIGN.md §14): fold the plane's host state
+            # — slot sessions, event heap, pool bindings, population
+            # cursor — into the same snapshot, so `resume` replays the
+            # event walk bitwise from the boundary
+            tr_arrays, tr_meta = self._plane.state(self.sim.store)
+            arrays.update(tr_arrays)
+            meta["traffic"] = tr_meta
         ckpt.save_snapshot(self.spec.checkpoint_dir, t, arrays, meta)
 
     def _restore_state(self, arrays: dict, meta: dict) -> None:
@@ -263,6 +291,8 @@ class Session:
         self.sim.rng.bit_generator.state = meta["rng_sim"]
         if "controller" in meta:
             self.policy.load_state_dict(meta["controller"])
+        if self._plane is not None:
+            self._plane.restore(self.sim, arrays, meta["traffic"])
         res = SimResult(
             rounds=[int(x) for x in arrays["res_rounds"]],
             clock=[float(x) for x in arrays["res_clock"]],

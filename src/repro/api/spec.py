@@ -20,6 +20,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.config import SFLConfig
+from repro.mesh.spec import MeshSpec
 from repro.traffic.population import TrafficSpec
 
 # Bumped when fields change incompatibly; `from_dict` accepts any dict
@@ -95,6 +96,12 @@ class ExperimentSpec:
     # is built at pow2 slot capacity and `n_clients` becomes the active
     # cohort cap.  None is the synchronous path, bit-for-bit unchanged.
     traffic: Optional[TrafficSpec] = None
+    # device-mesh scale-out (DESIGN.md §15): a `MeshSpec` shards the
+    # client axis of the scan engine's donated carry over a device mesh
+    # with hierarchical edge->cloud aggregation; `mesh.population` adds
+    # the host-side cohort bank (logical N beyond resident slots).
+    # None is the single-device path, bit-for-bit unchanged.
+    mesh: Optional[MeshSpec] = None
     sfl: SFLConfig = SFLConfig(lr=0.05)
 
     # -- validation ---------------------------------------------------------
@@ -163,12 +170,44 @@ class ExperimentSpec:
                 raise ValueError(
                     "traffic mode owns its fault semantics — "
                     "fault_mode='soft' only")
-            if self.checkpoint_every:
-                raise ValueError(
-                    "traffic mode does not support checkpointing yet")
             if self.n_clients > 64:
                 raise ValueError(
                     "traffic mode caps the active cohort at 64 slots")
+        if self.mesh is not None:
+            if not isinstance(self.mesh, MeshSpec):
+                raise ValueError("mesh must be a MeshSpec or None")
+            self.mesh.validated()
+            if self.resolved_engine != "scan":
+                raise ValueError(
+                    "mesh mode shards the scan carry — "
+                    "engine='scan' (or None) only")
+            if self.fault_mode != "soft":
+                raise ValueError(
+                    "mesh mode supports fault_mode='soft' only (the "
+                    "dropout/deadline participation plans are not yet "
+                    "shard-aware)")
+            if self.traffic is not None:
+                raise ValueError(
+                    "mesh and traffic modes are mutually exclusive — "
+                    "both own the slot axis")
+            if self.checkpoint_every:
+                raise ValueError(
+                    "mesh mode does not support checkpointing yet "
+                    "(sharded carry snapshots)")
+            if self.n_clients % self.mesh.n_edges != 0:
+                raise ValueError(
+                    f"n_clients {self.n_clients} must be divisible by "
+                    f"mesh.n_edges {self.mesh.n_edges}")
+            if (self.mesh.population is not None
+                    and self.mesh.population < self.n_clients):
+                raise ValueError(
+                    f"mesh.population {self.mesh.population} must be >= "
+                    f"n_clients {self.n_clients} (the resident cohort)")
+            if self.mesh.population is not None and self.scenario is not None:
+                raise ValueError(
+                    "cohort-bank runs (mesh.population) cannot ride a "
+                    "scenario preset — traces are per resident slot, not "
+                    "per logical client")
         return self
 
     # -- derived views ------------------------------------------------------
@@ -212,6 +251,11 @@ class ExperimentSpec:
             # refuse to stack: the traffic plane's event walk mutates
             # per-cell host state (slot surgery, virtual clock, store
             # pool rebinds) between scan dispatches — DESIGN.md §14
+            return None
+        if self.mesh is not None:
+            # refuse to stack: the sharded scan executable is built
+            # against one device mesh, and the cohort bank rotates slot
+            # bindings host-side between segments — DESIGN.md §15
             return None
         return (
             self.arch,
@@ -259,6 +303,8 @@ class ExperimentSpec:
             d["sfl"] = SFLConfig(**d["sfl"])
         if isinstance(d.get("traffic"), dict):
             d["traffic"] = TrafficSpec(**d["traffic"])
+        if isinstance(d.get("mesh"), dict):
+            d["mesh"] = MeshSpec(**d["mesh"])
         return cls(**d).validated()
 
     @classmethod

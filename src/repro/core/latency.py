@@ -127,6 +127,70 @@ class LatencyModel:
     def t_agg(self, b, cuts) -> float:
         return self.round_latency(b, cuts).t_agg
 
+    # -- two-tier (client -> edge server -> cloud) clock (DESIGN.md §15)
+    def tiered_round(self, b, cuts, n_edges: int, *,
+                     edge_flops: float = 0.0,
+                     edge_bw: float = 0.0) -> tuple:
+        """``(t_split, t_agg)`` under the two-tier topology: edge server
+        ``e`` fronts the contiguous client block ``[e*C, (e+1)*C)``.
+
+        A designed extension of the Eq. 28-39 clock: each barrier takes
+        its straggler max *per edge*, adds that edge's relay/aggregation
+        terms, then maxes across edges.  ``edge_bw`` (bit/s) prices the
+        edge->cloud relay — summed activation/gradient bits per edge on
+        the split barriers (Eq. 29/32 traffic transits the edge), the
+        largest member sub-model on the aggregation barrier (the edge
+        uploads one partially-aggregated model).  ``edge_flops``
+        (bit-adds/s) prices the edge's partial aggregation over its
+        members' sub-model bits.  Zeros mean a co-located edge (no
+        term), and ``n_edges=1`` with both zero reduces to Eq. 38/39
+        *bitwise* (a single-edge max is the global max; ``x + 0.0`` is
+        ``x``) — the degenerate contract `tests/test_mesh.py` gates.
+        """
+        n = self.n
+        n_edges = int(n_edges)
+        if n_edges < 1 or n % n_edges != 0:
+            raise ValueError(
+                f"n_edges {n_edges} must divide the cohort size {n}")
+        e = n // n_edges
+        rl = self.round_latency(b, cuts)
+        p = self.profile
+        bf = np.asarray(b, float)
+        j = np.asarray(cuts, int) - 1
+
+        def per_edge(x):
+            return np.asarray(x, float).reshape(n_edges, e)
+
+        # split barrier (Eq. 38 per tier): client->edge straggler max,
+        # plus the edge's relay of its members' summed traffic
+        act_bits = per_edge(bf * p.psi[j]).sum(axis=1)
+        grad_bits = per_edge(bf * p.chi[j]).sum(axis=1)
+        relay_up = act_bits / edge_bw if edge_bw > 0 else 0.0
+        relay_down = grad_bits / edge_bw if edge_bw > 0 else 0.0
+        t_split = (
+            float(np.max(per_edge(rl.t_f + rl.t_a_up).max(axis=1) + relay_up))
+            + rl.t_s_f + rl.t_s_b
+            + float(np.max(relay_down
+                           + per_edge(rl.t_g_down + rl.t_b).max(axis=1)))
+        )
+
+        # aggregation barrier (Eq. 39 per tier): members upload to the
+        # edge, the edge partially aggregates (summing its members'
+        # sub-model bits) and relays one partial model up; the download
+        # mirrors the relay
+        dsum = per_edge(p.delta[j]).sum(axis=1)
+        dmax = per_edge(p.delta[j]).max(axis=1)
+        agg_cmp = dsum / edge_flops if edge_flops > 0 else 0.0
+        model_relay = dmax / edge_bw if edge_bw > 0 else 0.0
+        t_agg = (
+            max(float(np.max(per_edge(rl.t_c_up).max(axis=1)
+                             + agg_cmp + model_relay)), rl.t_s_up)
+            + max(float(np.max(model_relay
+                               + per_edge(rl.t_c_down).max(axis=1))),
+                  rl.t_s_down)
+        )
+        return t_split, t_agg
+
     # -- fault-aware round accounting (DESIGN.md §12) -------------------
     def _server_terms(self, b, cuts, m: np.ndarray):
         """Eq. 30/31 restricted to the participating subset ``m``: the

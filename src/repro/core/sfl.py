@@ -134,7 +134,9 @@ class SFLEdgeSimulator:
         conv_impl: Optional[str] = None,
         update_impl: Optional[str] = None,
         fault_mode: str = "soft",
-        deadline_factor: float = 2.0
+        deadline_factor: float = 2.0,
+        mesh=None,
+        cohort_bank=None
     ):
         self.model = model
         self.cfg = model.cfg
@@ -163,6 +165,29 @@ class SFLEdgeSimulator:
             raise ValueError(f"unknown round engine {engine!r}")
         self.engine = engine
         self.vectorized = engine != "legacy"
+        # Mesh mode (DESIGN.md §15): shard the stacked client axis over
+        # a device mesh with two-tier Eq. 4/7 aggregation.  Scan-engine
+        # only (it is a layout statement over the scan executable), and
+        # soft faults only in v1 (the dropout/deadline planners reason
+        # over the flat barrier, not the tiered one).
+        self.mesh_spec = mesh
+        self._axis_name = None
+        self._edge_size = None
+        self._bank = None
+        if mesh is not None:
+            mesh.validated()
+            if engine != "scan":
+                raise ValueError("mesh mode needs engine='scan'")
+            if fault_mode != "soft":
+                raise ValueError(
+                    "mesh mode v1 runs fault_mode='soft' — tiered "
+                    "dropout/deadline planning is not implemented")
+            if self.n % mesh.n_edges != 0:
+                raise ValueError(
+                    f"n_edges {mesh.n_edges} must divide the cohort "
+                    f"size {self.n}")
+        elif cohort_bank is not None:
+            raise ValueError("cohort_bank rides mesh mode; pass mesh=")
         # Fault semantics (DESIGN.md §12): "soft" is the historical
         # resource-floor degradation (full participation, bit-for-bit);
         # "dropout" excludes unavailable clients (the churn/outage mask)
@@ -221,6 +246,18 @@ class SFLEdgeSimulator:
         if engine == "scan":
             self.store = DeviceClientStore.from_sampler(sampler)
             self._scan_fn = jax.jit(self._scan_segment, donate_argnums=(0,))
+        if mesh is not None:
+            from repro.mesh.sharded import build_device_mesh, \
+                make_sharded_scan
+
+            self._device_mesh = build_device_mesh(mesh, self.n)
+            self._axis_name = mesh.axis
+            self._edge_size = self.n // mesh.n_edges
+            self._scan_fn = make_sharded_scan(
+                self, self._device_mesh, mesh.axis)
+            if cohort_bank is not None:
+                self._bank = cohort_bank
+                cohort_bank.attach(self)
 
     @property
     def client_units(self):
@@ -329,7 +366,8 @@ class SFLEdgeSimulator:
         new_stacked = SP.hasfl_round_update(
             stacked, grads, masks, do_agg,
             self.sfl.lr, grad_scale=scale, impl=self._update_ops_impl,
-            participation=part
+            participation=part,
+            axis_name=self._axis_name, edge_size=self._edge_size
         )
         return new_stacked, losses
 
@@ -464,6 +502,12 @@ class SFLEdgeSimulator:
         straggler maxes, deadline-capped barriers — `core.latency`).
         """
         if self.fault_mode == "soft":
+            if self.mesh_spec is not None and self.mesh_spec.tiered_latency:
+                ts, ta = self.lat.tiered_round(
+                    b, cuts, self.mesh_spec.n_edges,
+                    edge_flops=self.mesh_spec.edge_flops,
+                    edge_bw=self.mesh_spec.edge_bw)
+                return None, ts, ta
             return None, self.lat.t_split(b, cuts), self.lat.t_agg(b, cuts)
         if self.fault_mode == "dropout":
             part = np.asarray(self.available, bool)
@@ -502,19 +546,18 @@ class SFLEdgeSimulator:
         barriered Eq. 38 clock, per-round staleness weights ride the
         participation lane, and cohort churn rewrites store slots at
         segment boundaries.  ``traffic=None`` is the synchronous path,
-        bit-for-bit unchanged (the tier-1 gate).  Scan engine only, and
-        mutually exclusive with checkpoint/resume.
+        bit-for-bit unchanged (the tier-1 gate).  Scan engine only.
+        Checkpoint/resume composes: the Session snapshot carries the
+        plane's host state (slot/pool bindings, event heap, population
+        cursor) alongside the params (DESIGN.md §14/§15).
         """
         reconf = reconfigure_every or self.sfl.agg_interval
         if traffic is not None:
             if self.engine != "scan":
                 raise ValueError("traffic mode needs engine='scan'")
-            if checkpoint_every or snapshot_cb or resume is not None:
-                raise ValueError(
-                    "traffic mode does not support checkpoint/resume yet")
             return self._run_traffic(
                 policy_fn, rounds, eval_every, reconf, verbose, scenario,
-                traffic)
+                traffic, checkpoint_every, snapshot_cb, resume)
         if self.engine == "scan":
             return self._run_scan(
                 policy_fn, rounds, eval_every, reconf,
@@ -719,6 +762,13 @@ class SFLEdgeSimulator:
             clock = self._advance_clock(clock, t, nxt, b, cuts, scenario)
             t = nxt
 
+            if self._bank is not None and t < rounds \
+                    and t % self.sfl.agg_interval == 0:
+                # cohort rotation at the agg-aligned boundary: the
+                # departing cohort's state is already folded into the
+                # Eq. 7 broadcast, so the bank swaps pools/profiles and
+                # re-broadcasts the aggregate (DESIGN.md §15)
+                self._bank.rotate(self, t)
             b, cuts = self._maybe_reconfigure(
                 res, policy_fn, t, reconf,
                 rounds, b, cuts
@@ -735,7 +785,8 @@ class SFLEdgeSimulator:
 
     def _run_traffic(
         self, policy_fn: Callable, rounds: int, eval_every: int,
-        reconf: int, verbose: bool, scenario, traffic
+        reconf: int, verbose: bool, scenario, traffic,
+        checkpoint_every: int = 0, snapshot_cb=None, resume=None
     ) -> SimResult:
         """Segment scheduler for the semi-async streaming mode.
 
@@ -748,13 +799,31 @@ class SFLEdgeSimulator:
         Empty slots train the 1-sample dummy batch at weight zero, so
         every array shape matches the fixed-cohort run and the scan
         executable is shared.
+
+        Checkpointing mirrors `_run_scan` too: ckpt multiples become
+        segment boundaries and the snapshot fires after the boundary's
+        surgery/injection/reconfigure — the Session folds the plane's
+        host state (`TrafficPlane.state`) into the same snapshot, so a
+        resumed run replays the identical event walk.
         """
-        res = SimResult()
-        traffic.attach(self, scenario)
-        traffic.inject_profiles(self, scenario, 0)
-        t = 0
-        b, cuts = policy_fn(self, self.rng)
-        self._record_policy(res, b, cuts)
+        ckpt = int(checkpoint_every or 0)
+        if resume is not None:
+            res = resume["res"]
+            t = int(resume["t"])
+            b = np.asarray(resume["b"])
+            cuts = np.asarray(resume["cuts"])
+            # plane state (clock, heap, slots, pools, population cursor)
+            # was restored by the caller before run(); attach only
+            # validates wiring and re-derives the construction pool
+            traffic.attach(self, scenario, resume=True)
+            traffic.inject_profiles(self, scenario, t)
+        else:
+            res = SimResult()
+            traffic.attach(self, scenario)
+            traffic.inject_profiles(self, scenario, 0)
+            t = 0
+            b, cuts = policy_fn(self, self.rng)
+            self._record_policy(res, b, cuts)
         n_units_total = len(self.units)
 
         while t < rounds:
@@ -762,6 +831,8 @@ class SFLEdgeSimulator:
                 (t // eval_every + 1) * eval_every,
                 (t // reconf + 1) * reconf, rounds
             )
+            if ckpt:
+                nxt = min(nxt, (t // ckpt + 1) * ckpt)
             ucuts = self._unit_cuts(np.asarray(cuts))
             l_c_units = int(np.max(ucuts))
             masks = jnp.asarray(
@@ -786,6 +857,8 @@ class SFLEdgeSimulator:
                 self._record_metrics(
                     res, t, traffic.clock, np.asarray(seg_losses)[-1],
                     verbose, live=traffic.live_mask())
+            if ckpt and snapshot_cb is not None and t % ckpt == 0:
+                snapshot_cb(t, traffic.clock, b, cuts, res)
         return res
 
     def _aggregate_model(self, live=None):

@@ -145,9 +145,33 @@ def client_unit_mask(cfg: ModelConfig, n_units: int, l_c_units: int):
     return mask
 
 
+def two_tier_common(spec, w, edge_size, axis_name):
+    """Hierarchical Eq. 4/7 mean under `shard_map` (DESIGN.md §15).
+
+    ``spec`` is the local ``[n_local, ...]`` shard of per-client SGD
+    results, ``w`` the local participation weights.  Per-edge partial
+    sums reduce on-shard (each shard holds whole edges, so no edge
+    straddles devices), then one ``psum`` over ``axis_name`` combines
+    edge sums and survivor counts at the cloud.  Equal to the flat
+    survivor-renormalized mean by linearity — floating point only gets
+    to reassociate, which the equivalence tests gate at fp32 tolerance.
+    Returns ``(common, global survivor count)``.
+    """
+    n_local = spec.shape[0]
+    e = int(edge_size or n_local)
+    w = w.astype(spec.dtype)
+    w_col = w.reshape((-1,) + (1,) * (spec.ndim - 1))
+    edge_sums = (spec * w_col).reshape(
+        (n_local // e, e) + spec.shape[1:]).sum(axis=1)
+    total = jax.lax.psum(edge_sums.sum(axis=0), axis_name)
+    cnt = jax.lax.psum(w.sum(), axis_name)
+    return total / jnp.where(cnt > 0, cnt, 1.0), cnt
+
+
 def hasfl_round_update(
     stacked: list, grads: list, masks, do_agg,
-    gamma: float, grad_scale=None, impl=None, participation=None
+    gamma: float, grad_scale=None, impl=None, participation=None,
+    axis_name=None, edge_size=None
 ) -> list:
     """One HASFL parameter update over [N, ...]-stacked units (traceable).
 
@@ -180,6 +204,14 @@ def hasfl_round_update(
     non-agg rounds (re-syncing on the next broadcast), and a
     drop-everyone round degenerates to holding params everywhere.
     ``None`` keeps the historical full-cohort path bit-for-bit.
+
+    ``axis_name`` switches the mean to the two-tier hierarchy: the
+    function then runs *inside* `shard_map` over that mesh axis with
+    ``stacked``/``grads``/``participation`` holding the local client
+    shard, and the Eq. 4/7 combine goes through `two_tier_common`
+    (per-edge partial sums of ``edge_size`` clients, then one cross-
+    shard psum).  The keep-flag fold stays shard-local — kernels receive
+    the combined mean precomputed and never issue collectives.
     """
     if impl is not None:
         from repro.kernels import ops as KOPS
@@ -195,10 +227,24 @@ def hasfl_round_update(
             else:
                 keep_vec = jnp.logical_and(keep_spec, participation > 0)
 
-            def upd_k(p, g, keep_vec=keep_vec):
+            def upd_k(p, g, keep_vec=keep_vec, keep_spec=keep_spec):
+                pf, gf = p.reshape(n, -1), g.reshape(n, -1)
+                common = use_common = None
+                if axis_name is not None:
+                    # the collective cannot run inside a kernel tile:
+                    # combine here, hand the kernel the finished mean
+                    gs = gf * scale.reshape(-1, 1)
+                    spec = pf - gamma * gs.astype(pf.dtype)
+                    w = ones if participation is None else \
+                        participation.astype(spec.dtype)
+                    common, cnt = two_tier_common(
+                        spec, w, edge_size, axis_name)
+                    use_common = jnp.logical_and(
+                        jnp.logical_not(keep_spec), cnt > 0)
                 out = KOPS.clip_sgd(
-                    p.reshape(n, -1), g.reshape(n, -1), scale, keep_vec,
-                    participation, gamma=gamma, impl=impl)
+                    pf, gf, scale, keep_vec,
+                    participation, gamma=gamma, impl=impl,
+                    common=common, use_common=use_common)
                 return out.reshape(p.shape)
 
             new_stacked.append(jax.tree_util.tree_map(upd_k, p_u, g_u))
@@ -214,6 +260,25 @@ def hasfl_round_update(
             # Eq. 5-6: client-specific — per-client SGD
             spec = p - gamma * g.astype(p.dtype)
             keep_spec = jnp.logical_and(m > 0, jnp.logical_not(do_agg))
+            if axis_name is not None:
+                # two-tier combine (mesh mode): same selects as the flat
+                # paths below, only the mean is hierarchical
+                w = (jnp.ones((spec.shape[0],), spec.dtype)
+                     if participation is None
+                     else participation.astype(spec.dtype))
+                common, cnt = two_tier_common(spec, w, edge_size, axis_name)
+                if participation is None:
+                    return jnp.where(
+                        keep_spec, spec,
+                        jnp.broadcast_to(common[None], p.shape))
+                keep = jnp.logical_and(
+                    keep_spec, participation > 0).reshape(
+                        (-1,) + (1,) * (spec.ndim - 1))
+                use_common = jnp.logical_and(
+                    jnp.logical_not(keep_spec), cnt > 0)
+                fallback = jnp.where(
+                    use_common, jnp.broadcast_to(common[None], p.shape), p)
+                return jnp.where(keep, spec, fallback)
             if participation is None:
                 # Eq. 4 == Eq. 7 aggregate: server-common units take the
                 # mean update every round (the client mean is identical

@@ -95,6 +95,21 @@ def auto_param_spec(shape, mesh, *, expert: bool = False,
     return P(*spec)
 
 
+def client_axis_spec(shape, mesh, axis: str) -> P:
+    """PartitionSpec for an ``[N, ...]``-stacked client leaf on a client
+    mesh: the leading axis takes ``axis``; inner dims go through the same
+    largest-divisible-axis inference as everything else (unsharded when
+    the mesh carries no data/model axes, as `repro.mesh`'s clients-only
+    mesh does).
+    """
+    shape = tuple(int(s) for s in shape)
+    if not shape:
+        return P()
+    inner = list(auto_param_spec(shape, mesh, skip=1))
+    inner[0] = axis
+    return P(*inner)
+
+
 # ---------------------------------------------------------------------------
 # Tree-level inference
 # ---------------------------------------------------------------------------
@@ -222,6 +237,58 @@ def make_shard_fn(mesh):
         return x
 
     return shard
+
+
+def make_seq_shard_fn(mesh):
+    """Sequence-parallel activation constraint: batch over the data axes
+    AND the sequence axis over "model" (for rank-3 activations).
+
+    The measured alternative to `make_shard_fn`'s batch-only layout —
+    lowers per-device HBM traffic on long-sequence shapes at the cost of
+    extra all-gathers around attention.  The ``seq_parallel`` experiment
+    in launch/perf.py installs it.
+    """
+    if mesh is None:
+        return None
+    n_tp = _model_size(mesh)
+    dpax = _dp_axes(mesh)
+    n_dp = _axis_size(mesh, dpax)
+
+    def shard(x):
+        if x.ndim != 3:
+            return x
+        batch = dpax if (x.shape[0] % n_dp == 0 and x.shape[0] >= n_dp
+                         and n_dp > 1) else None
+        seq = "model" if (x.shape[1] % n_tp == 0 and x.shape[1] >= n_tp
+                          and n_tp > 1) else None
+        if batch or seq:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(batch, seq, None)))
+        return x
+
+    return shard
+
+
+def cache_shardings_replicated(cache, mesh):
+    """Decode-cache tree with k/v replicated across "model": batch over
+    data only, no head_dim sharding.
+
+    Removes the qk^T psum entirely at the cost of redundant attention
+    compute and higher per-device HBM traffic — the measured trade the
+    ``cache_replicated`` experiment in launch/perf.py flips to.
+    """
+    dpax = _dp_axes(mesh)
+    n_dp = _axis_size(mesh, dpax)
+
+    def leaf_fn(pstr, shape):
+        if not shape:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and n_dp > 1 and shape[1] % n_dp == 0:
+            spec[1] = dpax
+        return NamedSharding(mesh, P(*spec))
+
+    return _tree_specs(cache, mesh, leaf_fn)
 
 
 def make_rep_shard_fn(mesh):

@@ -41,11 +41,35 @@ def _kernel(p_ref, g_ref, s_ref, k_ref, w_ref, o_ref, *, gamma: float):
     o_ref[...] = jnp.where(keep, spec, fallback).astype(o_ref.dtype)
 
 
+def _kernel_ext(p_ref, g_ref, s_ref, k_ref, u_ref, c_ref, o_ref, *,
+                gamma: float):
+    """The external-mean variant (mesh mode, DESIGN.md §15): the Eq. 4/7
+    mean arrives precomputed in ``c_ref`` ([1, bd]) — the cross-shard
+    combine is a collective a kernel tile cannot issue — with ``u_ref``
+    ([1, 1]) the caller's global use-common flag.  Only the shard-local
+    clip + SGD + keep-flag fold runs in-register."""
+    p = p_ref[...].astype(jnp.float32)                     # [N, bd]
+    g = g_ref[...].astype(jnp.float32) * s_ref[...]        # scale: [N, 1]
+    spec = p - gamma * g
+    keep = k_ref[...] > 0                                  # [N, 1]
+    common = c_ref[...].astype(jnp.float32)                # [1, bd]
+    use_common = u_ref[0, 0] > 0
+    fallback = jnp.where(use_common,
+                         jnp.broadcast_to(common, spec.shape), p)
+    o_ref[...] = jnp.where(keep, spec, fallback).astype(o_ref.dtype)
+
+
 def clip_sgd_update(p, g, scale, keep_spec, participation=None, *,
                     gamma: float, block_d: int = 2048,
-                    interpret: bool = True):
+                    interpret: bool = True, common=None, use_common=None):
     """``p, g: [N, D]``; ``scale, keep_spec: [N]``; ``participation``:
     ``[N]`` float weights or None (full cohort).
+
+    ``common`` ([D], optional) short-circuits the in-register client
+    mean with a precomputed one (`split.two_tier_common`'s hierarchical
+    combine under shard_map) gated by the scalar ``use_common``; the
+    participation weights are then already folded into the mean and the
+    kernel only applies the shard-local select.
 
     Returns the updated ``[N, D]`` leaf.  D is zero-padded to the block
     width (padded columns compute garbage-free zeros and are sliced off).
@@ -59,6 +83,29 @@ def clip_sgd_update(p, g, scale, keep_spec, participation=None, *,
         g = jnp.pad(g, ((0, 0), (0, pad)))
     s_col = scale.astype(jnp.float32).reshape(n, 1)
     k_col = keep_spec.astype(jnp.float32).reshape(n, 1)
+
+    if common is not None:
+        c_row = common.astype(jnp.float32).reshape(1, d)
+        if pad:
+            c_row = jnp.pad(c_row, ((0, 0), (0, pad)))
+        u_col = use_common.astype(jnp.float32).reshape(1, 1)
+        out = pl.pallas_call(
+            functools.partial(_kernel_ext, gamma=gamma),
+            grid=(n_blocks,),
+            in_specs=[
+                pl.BlockSpec((n, block_d), lambda i: (0, i)),
+                pl.BlockSpec((n, block_d), lambda i: (0, i)),
+                pl.BlockSpec((n, 1), lambda i: (0, 0)),
+                pl.BlockSpec((n, 1), lambda i: (0, 0)),
+                pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                pl.BlockSpec((1, block_d), lambda i: (0, i)),
+            ],
+            out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((n, n_blocks * block_d), p.dtype),
+            interpret=interpret,
+        )(p, g, s_col, k_col, u_col, c_row)
+        return out[:, :d]
+
     if participation is None:
         w_col = jnp.ones((n, 1), jnp.float32)
     else:

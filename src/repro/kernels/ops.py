@@ -105,14 +105,19 @@ def batched_conv(x, w, b, *, stride: int = 1, impl: str = "auto"):
 
 
 @functools.partial(jax.jit, static_argnames=("gamma", "impl"))
-def clip_sgd(p, g, scale, keep_spec, participation=None, *, gamma: float,
-             impl: str = "auto"):
+def clip_sgd(p, g, scale, keep_spec, participation=None, common=None,
+             use_common=None, *, gamma: float, impl: str = "auto"):
     """Fused per-client clip + SGD + aggregation-select over one [N, D]
     leaf (the `split.hasfl_round_update` inner loop).
 
     ``keep_spec`` is a per-client [N] keep vector; ``participation`` an
     optional [N] survivor-weight vector renormalizing the Eq. 4/7 mean
     (None = full cohort, the historical bitwise path).
+
+    ``common``/``use_common`` (mesh mode, DESIGN.md §15): the Eq. 4/7
+    mean arrives precomputed — `split.two_tier_common` already ran the
+    cross-shard combine, which a kernel tile cannot issue — and the
+    kernel applies only the shard-local clip + SGD + keep-flag fold.
 
     impl: auto | kernel | interpret | ref.  ``ref`` (and ``auto``
     off-TPU) is the same jnp op sequence as the inline update, so the
@@ -123,4 +128,7 @@ def clip_sgd(p, g, scale, keep_spec, participation=None, *, gamma: float,
         impl,
         ref=functools.partial(REF.clip_sgd_ref, gamma=gamma),
         kernel=functools.partial(_clip_sgd, gamma=gamma))
+    if common is not None:
+        return fn(p, g, scale, keep_spec, participation,
+                  common=common, use_common=use_common)
     return fn(p, g, scale, keep_spec, participation)

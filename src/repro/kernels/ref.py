@@ -41,7 +41,8 @@ def batched_conv_ref(x, w, b, *, stride: int = 1):
     return jax.vmap(one)(x, w, b)
 
 
-def clip_sgd_ref(p, g, scale, keep_spec, participation=None, *, gamma: float):
+def clip_sgd_ref(p, g, scale, keep_spec, participation=None, *,
+                 gamma: float, common=None, use_common=None):
     """The `core.split.hasfl_round_update` per-leaf algebra, verbatim.
 
     p, g: [N, D]; scale: [N]; keep_spec: traced per-client keep vector
@@ -60,6 +61,15 @@ def clip_sgd_ref(p, g, scale, keep_spec, participation=None, *, gamma: float):
     g = g * scale.reshape(-1, 1)
     spec = p - gamma * g.astype(p.dtype)
     keep = keep_spec.reshape(-1, 1)
+    if common is not None:
+        # mesh path (DESIGN.md §15): the Eq. 4/7 mean arrives
+        # precomputed from the hierarchical cross-shard combine; only
+        # the shard-local keep-flag fold happens here.  ``use_common``
+        # is the caller's global "agg/common round with survivors" flag
+        # (a shard-local any(keep) would be wrong under shard_map).
+        fallback = jnp.where(use_common,
+                             jnp.broadcast_to(common[None], p.shape), p)
+        return jnp.where(keep, spec, fallback)
     if participation is None:
         common = spec.mean(axis=0)
         return jnp.where(keep, spec,

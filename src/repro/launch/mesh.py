@@ -31,12 +31,18 @@ def dp_axes(mesh):
 
 
 def axis_size(mesh, axes) -> int:
-    """Total device count across `axes` (a name, tuple of names, or None)."""
+    """Total device count across `axes` (a name, tuple of names, or None).
+
+    Axes absent from the mesh count as size 1 — so the sharding-inference
+    helpers work unchanged on meshes that carry only a subset of the
+    production axes (e.g. the clients-only mesh `repro.mesh` builds has
+    neither "data" nor "model").
+    """
     if axes is None:
         return 1
     if isinstance(axes, str):
         axes = (axes,)
     size = 1
     for a in axes:
-        size *= int(mesh.shape[a])
+        size *= int(mesh.shape.get(a, 1))
     return size

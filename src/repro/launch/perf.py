@@ -14,8 +14,6 @@ EXPERIMENTS.md §Perf.
 import argparse
 import json
 
-import jax
-
 from repro.launch import dryrun as DR
 
 
@@ -65,30 +63,11 @@ def _seqp():
     long-sequence shapes at the cost of extra all-gathers around
     attention (collective term up)."""
     import repro.dist.sharding as SH
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
-    def make_shard_fn(mesh):
-        if mesh is None:
-            return None
-        n_tp = mesh.shape["model"]
-        dp = SH._dp_axes(mesh)
-        n_dp = SH._axis_size(mesh, dp)
-
-        def shard(x):
-            if x.ndim != 3:
-                return x
-            batch = dp if (x.shape[0] % n_dp == 0 and x.shape[0] >= n_dp) \
-                else None
-            seq = "model" if (x.shape[1] % n_tp == 0
-                              and x.shape[1] >= n_tp) else None
-            if batch or seq:
-                return jax.lax.with_sharding_constraint(
-                    x, NamedSharding(mesh, P(batch, seq, None)))
-            return x
-        return shard
-
-    SH.make_shard_fn = make_shard_fn
-    DR.make_shard_fn = make_shard_fn
+    # one sharding-inference path: the variant lives next to the baseline
+    # in repro.dist.sharding; the experiment just swaps the hook
+    SH.make_shard_fn = SH.make_seq_shard_fn
+    DR.make_shard_fn = SH.make_seq_shard_fn
 
 
 @experiment("cache_replicated")
@@ -100,26 +79,10 @@ def _cache_repl():
     microseconds) and higher per-device HBM traffic.  Predict: collective
     -> ~0, memory term up ~2-3x; net win while mem < old coll."""
     import repro.dist.sharding as SH
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    def cache_shardings(cache, mesh):
-        dp = SH._dp_axes(mesh)
-        n_dp = SH._axis_size(mesh, dp)
-
-        def leaf_fn(pstr, shape):
-            if not shape:
-                return NamedSharding(mesh, P())
-            spec = [None] * len(shape)
-            dims = list(range(1, len(shape)))
-            if len(dims) >= 1 and shape[dims[0]] % n_dp == 0:
-                spec[dims[0]] = dp
-            return NamedSharding(mesh, P(*spec))
-
-        return SH._tree_specs(cache, mesh, leaf_fn)
-
-    SH.cache_shardings = cache_shardings
     import repro.launch.dryrun as DRm
-    DRm.cache_shardings = cache_shardings
+
+    SH.cache_shardings = SH.cache_shardings_replicated
+    DRm.cache_shardings = SH.cache_shardings_replicated
 
 
 @experiment("flat_experts")

@@ -1,0 +1,12 @@
+"""repro.mesh — shard the stacked client axis over a device mesh.
+
+Two-tier (client -> edge server -> cloud) topology for the scan engine
+(DESIGN.md §15): `MeshSpec` declares the tier layout, `sharded` wraps
+the scan segment in `shard_map` so each device owns an N/d slice of
+client units, `topology` holds the pure edge-assignment/partial-sum
+algebra, and `bank.CohortBank` keeps only the sampled active cohort
+resident so logical N grows to 10k+ on fixed device memory.
+"""
+from repro.mesh.spec import MeshSpec
+
+__all__ = ["MeshSpec"]

@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.config import DeviceProfile
 from repro.scenarios.traces import FIELDS
-from repro.traffic.events import EventLog, EventQueue
+from repro.traffic.events import KINDS, EventLog, EventQueue
 from repro.traffic.population import Population, TrafficSpec, staleness_weight
 from repro.traffic.store import dummy_pool, live_mean, write_slot
 
@@ -78,8 +78,15 @@ class TrafficPlane:
 
     # -- wiring ---------------------------------------------------------
 
-    def attach(self, sim, scenario=None) -> None:
-        """Bind to a scan-engine simulator and admit the initial cohort."""
+    def attach(self, sim, scenario=None, resume=False) -> None:
+        """Bind to a scan-engine simulator and admit the initial cohort.
+
+        ``resume=True`` (a restored run) only validates the wiring and
+        re-derives the construction-time fallback pool — the slot state,
+        event heap, and population cursor were already restored onto
+        this plane (`restore`), and the snapshot round's admit surgery
+        already happened before the snapshot was taken.
+        """
         if sim.engine != "scan":
             raise ValueError("traffic mode needs engine='scan'")
         if sim.fault_mode != "soft":
@@ -95,6 +102,8 @@ class TrafficPlane:
                 f"scenario models {scenario.n} lanes but the plane expects "
                 f"capacity {self.capacity}")
         self._fallback = list(sim.devices)
+        if resume:
+            return
         self._pending_admit.extend(self.pop.initial_cohort(self.cohort))
         self.apply_boundary(sim, 0)
 
@@ -256,3 +265,113 @@ class TrafficPlane:
             self.user[slot] = uid
             self.queue.push(self.clock + dwell, "depart", (slot, uid))
             self.log.append(self.clock, t, "admit", slot=slot, user=uid)
+
+    # -- snapshot round-trip (rides the Session checkpoint, §14/§15) ----
+
+    def state(self, store) -> tuple:
+        """``(arrays, meta)`` capturing the plane's full host state.
+
+        Everything the event walk depends on: per-slot session state,
+        the event heap (entries + insertion counter — tie-breaks are
+        part of determinism), pending admit/evict surgery, the event
+        log columns, the store's per-slot pool bindings (flattened +
+        offsets: ragged), and the population's RNG/arrival cursor.
+        ``arrays`` rides the snapshot npz via `ckpt.atomic_savez`,
+        ``meta`` the json marker via `ckpt.atomic_json` — both through
+        the Session's existing atomic writers.
+        """
+        heap = sorted(self.queue._heap)
+        pools = [np.asarray(p, np.int64) for p in store.client_indices]
+        arrays = {
+            "tr_live": self.live.copy(),
+            "tr_busy": self.busy.copy(),
+            "tr_user": self.user.copy(),
+            "tr_last_sync": self.last_sync.copy(),
+            "tr_t_done": self.t_done.copy(),
+            "tr_q_time": np.asarray([h[0] for h in heap], np.float64),
+            "tr_q_seq": np.asarray([h[1] for h in heap], np.int64),
+            "tr_q_kind": np.asarray(
+                [KINDS.index(h[2]) for h in heap], np.int64),
+            "tr_q_slot": np.asarray([h[3][0] for h in heap], np.int64),
+            "tr_q_uid": np.asarray([h[3][1] for h in heap], np.int64),
+            "tr_admit_uid": np.asarray(
+                [u for u, _ in self._pending_admit], np.int64),
+            "tr_admit_dwell": np.asarray(
+                [d for _, d in self._pending_admit], np.float64),
+            "tr_evict_slot": np.asarray(
+                [s for s, _ in self._pending_evict], np.int64),
+            "tr_evict_uid": np.asarray(
+                [u for _, u in self._pending_evict], np.int64),
+            "tr_log_time": np.asarray(self.log.time, np.float64),
+            "tr_log_round": np.asarray(self.log.round, np.int64),
+            "tr_log_kind": np.asarray(self.log.kind, np.int64),
+            "tr_log_slot": np.asarray(self.log.slot, np.int64),
+            "tr_log_user": np.asarray(self.log.user, np.int64),
+            "tr_pool_flat": (np.concatenate(pools) if pools
+                             else np.zeros(0, np.int64)),
+            "tr_pool_len": np.asarray([len(p) for p in pools], np.int64),
+        }
+        meta = {
+            "clock": float(self.clock),
+            "round": int(self._round),
+            "queue_n": int(self.queue._n),
+            "pop_rng": self.pop.rng.bit_generator.state,
+            "pop_t_next": float(self.pop._t_next),
+        }
+        return arrays, meta
+
+    def restore(self, sim, arrays: dict, meta: dict) -> None:
+        """Inverse of `state`, onto a freshly-constructed plane + sim.
+
+        Rebinds the simulator's store pools (slot surgery — the same
+        `set_pool` path churn uses, so shapes stay stable) and leaves
+        the plane exactly as the snapshot's event walk left it; the
+        parameter rows themselves ride the Session snapshot.
+        """
+        import heapq
+
+        self.clock = float(meta["clock"])
+        self._round = int(meta["round"])
+        self.live = np.asarray(arrays["tr_live"]).astype(bool).copy()
+        self.busy = np.asarray(arrays["tr_busy"]).astype(bool).copy()
+        self.user = np.asarray(arrays["tr_user"], np.int64).copy()
+        self.last_sync = np.asarray(
+            arrays["tr_last_sync"], np.int64).copy()
+        self.t_done = np.asarray(arrays["tr_t_done"], np.float64).copy()
+        self.queue = EventQueue()
+        self.queue._heap = [
+            (float(t), int(s), KINDS[int(k)], (int(sl), int(u)))
+            for t, s, k, sl, u in zip(
+                arrays["tr_q_time"], arrays["tr_q_seq"],
+                arrays["tr_q_kind"], arrays["tr_q_slot"],
+                arrays["tr_q_uid"])
+        ]
+        heapq.heapify(self.queue._heap)
+        self.queue._n = int(meta["queue_n"])
+        self._pending_admit = [
+            (int(u), float(d)) for u, d in zip(
+                arrays["tr_admit_uid"], arrays["tr_admit_dwell"])]
+        self._pending_evict = [
+            (int(s), int(u)) for s, u in zip(
+                arrays["tr_evict_slot"], arrays["tr_evict_uid"])]
+        self.log = EventLog()
+        self.log.time = [float(x) for x in arrays["tr_log_time"]]
+        self.log.round = [int(x) for x in arrays["tr_log_round"]]
+        self.log.kind = [int(x) for x in arrays["tr_log_kind"]]
+        self.log.slot = [int(x) for x in arrays["tr_log_slot"]]
+        self.log.user = [int(x) for x in arrays["tr_log_user"]]
+        # population cursor: generator state + the peeked arrival time
+        self.pop.rng.bit_generator.state = meta["pop_rng"]
+        self.pop._t_next = float(meta["pop_t_next"])
+        # slot surgery: rebind every pool exactly as the snapshot held it
+        offsets = np.cumsum(
+            np.concatenate([[0], np.asarray(arrays["tr_pool_len"])]))
+        flat = np.asarray(arrays["tr_pool_flat"], np.int64)
+        for slot in range(self.capacity):
+            sim.store.set_pool(
+                slot, flat[offsets[slot]:offsets[slot + 1]])
+        # base profiles re-derive from the admitted users (seeded)
+        self.base_profile = [
+            self.pop.user_profile(int(u)) if self.live[i] else None
+            for i, u in enumerate(self.user)
+        ]

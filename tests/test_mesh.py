@@ -1,0 +1,326 @@
+"""Device-mesh scale-out (DESIGN.md §15), single-device tier.
+
+Layers under test:
+
+- pure two-tier algebra: per-edge partial sums + cloud combine equal
+  the flat survivor-renormalized mean (linearity — uniform and
+  fractional staleness weights, zero-survivor guard);
+- `MeshSpec` validation + JSON round-trip through `ExperimentSpec`,
+  and the refuse-to-stack / mutual-exclusion rules;
+- end-to-end on ONE device: a mesh cell (d=1) reproduces the plain
+  run's decision stream and clock bitwise and its losses at fp32
+  tolerance — both for the flat topology (n_edges=1) and the
+  hierarchical one (n_edges>1, which reassociates the mean);
+- the tiered clock: n_edges=1 with co-located edges degenerates
+  BITWISE to the Eq. 38/39 round; edge resources strictly add time;
+- the cohort bank: seeded rotation at agg boundaries, per-id pool /
+  profile derivations, and resident-footprint invariance;
+- the external-common kernel variant against the in-register oracle.
+
+The d>1 equivalence lives in tests/test_mesh_multidevice.py (slow CI
+lane, 8 forced host devices).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, Session
+from repro.config import SFLConfig
+from repro.kernels.clip_sgd import clip_sgd_update
+from repro.launch.mesh import axis_size
+from repro.mesh import MeshSpec
+from repro.mesh.bank import CohortBank
+from repro.mesh.topology import (
+    edge_assignment,
+    edge_partials,
+    flat_mean,
+    two_tier_mean,
+)
+
+TIGHT = dict(rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pure two-tier algebra
+# ---------------------------------------------------------------------------
+
+def test_edge_assignment_blocks():
+    np.testing.assert_array_equal(
+        edge_assignment(8, 4), [0, 0, 1, 1, 2, 2, 3, 3])
+    np.testing.assert_array_equal(edge_assignment(4, 1), [0, 0, 0, 0])
+    with pytest.raises(ValueError):
+        edge_assignment(8, 3)
+
+
+@pytest.mark.parametrize("n_edges", [1, 2, 4, 8])
+def test_two_tier_mean_equals_flat_mean_uniform(n_edges):
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(8, 5))
+    w = np.ones(8)
+    np.testing.assert_allclose(
+        two_tier_mean(v, w, n_edges), flat_mean(v, w), **TIGHT)
+
+
+@pytest.mark.parametrize("n_edges", [1, 2, 4])
+def test_two_tier_mean_equals_flat_mean_fractional(n_edges):
+    """Fractional staleness weights (the traffic lane's participation
+    values) ride the same linear map — including edges whose whole
+    block dropped out (zero partial count)."""
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(8, 3, 2))
+    w = np.asarray([0.5, 0.0, 1.0, 0.25, 0.0, 0.0, 1.0, 0.125])
+    np.testing.assert_allclose(
+        two_tier_mean(v, w, n_edges), flat_mean(v, w), **TIGHT)
+    sums, counts = edge_partials(v, w, n_edges)
+    assert sums.shape == (n_edges, 3, 2) and counts.shape == (n_edges,)
+    np.testing.assert_allclose(counts.sum(), w.sum(), **TIGHT)
+
+
+def test_two_tier_mean_zero_survivors_guard():
+    v = np.random.default_rng(2).normal(size=(4, 3))
+    out = two_tier_mean(v, np.zeros(4), 2)
+    np.testing.assert_array_equal(out, np.zeros(3))   # 0/1, not 0/0
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+def _mesh_spec(mesh=None, **kw):
+    base = dict(
+        arch="vgg9-cifar-small", n_clients=8, partition="iid",
+        n_train=256, n_test=64, seed=3, policy="fixed(b=8,cut=4)",
+        estimate=False, rounds=8, eval_every=4,
+        sfl=SFLConfig(agg_interval=4, lr=0.05),
+        mesh=mesh if mesh is not None else MeshSpec(devices=1, n_edges=1),
+    )
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def test_mesh_spec_validation():
+    MeshSpec().validated()
+    with pytest.raises(ValueError):
+        MeshSpec(devices=0).validated()
+    with pytest.raises(ValueError):
+        MeshSpec(n_edges=0).validated()
+    with pytest.raises(ValueError):
+        # shards must hold whole edges
+        MeshSpec(devices=4, n_edges=2).validated()
+    with pytest.raises(ValueError):
+        MeshSpec(population=0).validated()
+    with pytest.raises(ValueError):
+        MeshSpec(edge_bw=-1.0).validated()
+    with pytest.raises(ValueError):
+        _mesh_spec(engine="vectorized").validated()
+    with pytest.raises(ValueError):
+        _mesh_spec(fault_mode="dropout").validated()
+    with pytest.raises(ValueError):
+        # n_edges must divide the cohort
+        _mesh_spec(MeshSpec(devices=1, n_edges=3)).validated()
+    with pytest.raises(ValueError):
+        # population below the resident cohort
+        _mesh_spec(MeshSpec(population=4)).validated()
+    with pytest.raises(ValueError):
+        _mesh_spec(MeshSpec(population=64), scenario="churn-heavy")\
+            .validated()
+    with pytest.raises(ValueError):
+        from repro.api import TrafficSpec
+        _mesh_spec(traffic=TrafficSpec()).validated()
+    with pytest.raises(ValueError):
+        _mesh_spec(checkpoint_every=4, checkpoint_dir="/tmp/x").validated()
+
+
+def test_mesh_spec_roundtrip_and_grid_key():
+    spec = _mesh_spec(MeshSpec(devices=1, n_edges=4, population=64,
+                               edge_flops=1e9, edge_bw=1e8)).validated()
+    assert spec.grid_key() is None                     # refuse-to-stack
+    assert spec.replace(mesh=None).grid_key() is not None
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec and isinstance(back.mesh, MeshSpec)
+
+
+def test_axis_size_counts_absent_axes_as_one():
+    mesh = jax.make_mesh((1,), ("clients",))
+    assert axis_size(mesh, "clients") == 1
+    assert axis_size(mesh, "data") == 1                # absent -> 1
+    assert axis_size(mesh, ("data", "model")) == 1
+    assert axis_size(mesh, None) == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on one device
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def plain_run():
+    sess = Session(_mesh_spec().replace(mesh=None))
+    return sess.run(), sess
+
+
+@pytest.mark.parametrize("n_edges", [1, 4])
+def test_mesh_d1_reproduces_plain_run(plain_run, n_edges):
+    """d=1: shard_map over a 1-device mesh must be the flat engine —
+    clocks and decisions bitwise (the spec-driven clock never sees d),
+    losses at fp32 tolerance (n_edges>1 reassociates the Eq. 4/7 sum)."""
+    res_ref, _ = plain_run
+    sess = Session(_mesh_spec(MeshSpec(devices=1, n_edges=n_edges)))
+    res = sess.run()
+    assert res.clock == res_ref.clock                  # float lists, exact
+    assert res.rounds == res_ref.rounds
+    for x, y in zip(res.b_history, res_ref.b_history):
+        np.testing.assert_array_equal(x, y)
+    for x, y in zip(res.cut_history, res_ref.cut_history):
+        np.testing.assert_array_equal(x, y)
+    np.testing.assert_allclose(res.test_loss, res_ref.test_loss, **TIGHT)
+    np.testing.assert_allclose(res.train_loss, res_ref.train_loss, **TIGHT)
+
+
+def test_mesh_run_params_match_flat(plain_run):
+    res_ref, sess_ref = plain_run
+    sess = Session(_mesh_spec(MeshSpec(devices=1, n_edges=2)))
+    sess.run()
+    ref = jax.tree_util.tree_leaves(sess_ref.sim._stacked)
+    got = jax.tree_util.tree_leaves(sess.sim._stacked)
+    for x, y in zip(got, ref):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiered clock
+# ---------------------------------------------------------------------------
+
+def test_tiered_round_degenerates_bitwise(plain_run):
+    """n_edges=1 + co-located edge (zero relay/agg resources) must be
+    the Eq. 38/39 round to the bit: same maxes, plus exact 0.0 terms."""
+    _, sess = plain_run
+    lat = sess.sim.lat
+    b = np.full(sess.sim.n, 8)
+    cuts = np.full(sess.sim.n, 4)
+    rl = lat.round_latency(b, cuts)
+    t_split, t_agg = lat.tiered_round(b, cuts, 1)
+    assert t_split == rl.t_split
+    assert t_agg == rl.t_agg
+    # multi-edge with co-located edges: per-edge max then cross-edge max
+    # is the global max — still bitwise
+    t_split4, t_agg4 = lat.tiered_round(b, cuts, 4)
+    assert t_split4 == rl.t_split
+    assert t_agg4 == rl.t_agg
+
+
+def test_tiered_round_edge_resources_add_time(plain_run):
+    _, sess = plain_run
+    lat = sess.sim.lat
+    b = np.full(sess.sim.n, 8)
+    cuts = np.full(sess.sim.n, 4)
+    rl = lat.round_latency(b, cuts)
+    t_split, t_agg = lat.tiered_round(
+        b, cuts, 4, edge_flops=1e9, edge_bw=1e8)
+    assert t_split > rl.t_split                        # relay terms added
+    assert t_agg > rl.t_agg
+    with pytest.raises(ValueError):
+        lat.tiered_round(b, cuts, 3)                   # 3 does not divide 8
+
+
+def test_mesh_clock_uses_tiered_terms():
+    """A mesh cell with real edge resources must run a *slower* clock
+    than the co-located one — and tiered_latency=False opts out."""
+    fast = Session(_mesh_spec(MeshSpec(devices=1, n_edges=4))).run()
+    slow = Session(_mesh_spec(MeshSpec(
+        devices=1, n_edges=4, edge_flops=1e9, edge_bw=1e8))).run()
+    flat = Session(_mesh_spec(MeshSpec(
+        devices=1, n_edges=4, edge_flops=1e9, edge_bw=1e8,
+        tiered_latency=False))).run()
+    assert all(s > f for s, f in zip(slow.clock, fast.clock))
+    assert flat.clock == fast.clock
+
+
+# ---------------------------------------------------------------------------
+# cohort bank
+# ---------------------------------------------------------------------------
+
+def test_cohort_bank_derivations_are_seeded():
+    m = MeshSpec(population=100)
+    a = CohortBank(m, n_resident=8, n_train=256)
+    b = CohortBank(m, n_resident=8, n_train=256)
+    np.testing.assert_array_equal(a.pool(42), b.pool(42))
+    assert a.profile(42) == b.profile(42)
+    assert a.profile(42) != a.profile(43)
+    assert len(a.pool(0)) == a.shard_size
+    assert a.pool(0).max() < 256
+    c1, c2 = a.sample_cohort(), a.sample_cohort()
+    assert len(c1) == 8 == len(np.unique(c1))
+    assert not np.array_equal(c1, c2)                  # stream advances
+    with pytest.raises(ValueError):
+        CohortBank(MeshSpec(), n_resident=8, n_train=256)  # no population
+    with pytest.raises(ValueError):
+        CohortBank(MeshSpec(population=4), n_resident=8, n_train=256)
+
+
+def test_cohort_bank_end_to_end_rotation():
+    """A population-64 cell on 8 resident slots: the bank rotates at
+    every interior agg boundary, rebinding pools/profiles and
+    broadcasting the aggregate row — and the run stays finite and
+    deterministic."""
+    spec = _mesh_spec(MeshSpec(devices=1, n_edges=4, population=64))
+    s1 = Session(spec)
+    r1 = s1.run()
+    bank = s1.sim._bank
+    assert bank is not None
+    assert bank.rotations == 1                         # t=4 of rounds=8
+    assert all(np.isfinite(r1.train_loss))
+    # rotation rebound the pools to the resident cohort's shards
+    for slot, lid in enumerate(bank.resident):
+        np.testing.assert_array_equal(
+            s1.sim.store.client_indices[slot], bank.pool(int(lid)))
+    # post-rotation rows all hold the same broadcast aggregate
+    leaf = np.asarray(jax.tree_util.tree_leaves(s1.sim._stacked)[0])
+    s2 = Session(spec)
+    r2 = s2.run()
+    assert r1.train_loss == r2.train_loss              # deterministic
+    np.testing.assert_array_equal(
+        leaf, np.asarray(jax.tree_util.tree_leaves(s2.sim._stacked)[0]))
+
+
+def test_cohort_bank_rotation_must_be_agg_aligned():
+    spec = _mesh_spec(MeshSpec(devices=1, n_edges=4, population=64))
+    sess = Session(spec)
+    with pytest.raises(ValueError, match="agg-aligned"):
+        sess.sim._bank.rotate(sess.sim, 3)
+
+
+# ---------------------------------------------------------------------------
+# external-common kernel variant
+# ---------------------------------------------------------------------------
+
+def test_clip_sgd_external_common_matches_internal():
+    """Precomputing the (participation-folded) mean outside the kernel
+    and passing it via ``common``/``use_common`` must reproduce the
+    in-register path at fp32 tolerance, for agg and non-agg rounds."""
+    rng = np.random.default_rng(7)
+    n, d = 8, 37
+    p = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    scale = jnp.asarray(rng.uniform(0.5, 1.0, size=n), jnp.float32)
+    w = jnp.asarray([1, 0, 0.5, 1, 0, 0.25, 1, 1], jnp.float32)
+    gamma = 0.1
+    spec = p - gamma * (g * scale[:, None])
+    cnt = w.sum()
+    common = (spec * w[:, None]).sum(0) / jnp.where(cnt > 0, cnt, 1.0)
+    for keep_all in (True, False):
+        keep = jnp.full(n, keep_all, bool)
+        use_common = jnp.logical_and(~jnp.any(keep), cnt > 0)
+        internal = clip_sgd_update(
+            p, g, scale, keep, w, gamma=gamma, block_d=16)
+        external = clip_sgd_update(
+            p, g, scale, keep, w, gamma=gamma, block_d=16,
+            common=common, use_common=use_common)
+        np.testing.assert_allclose(
+            np.asarray(external), np.asarray(internal), **TIGHT)
+    # drop-everyone with an external flag: holds params exactly
+    held = clip_sgd_update(
+        p, g, scale, jnp.zeros(n, bool), w, gamma=gamma, block_d=16,
+        common=common, use_common=jnp.asarray(False))
+    np.testing.assert_array_equal(np.asarray(held), np.asarray(p))

@@ -230,9 +230,10 @@ def test_spec_traffic_validation_and_roundtrip():
         _traffic_spec(engine="vectorized").validated()
     with pytest.raises(ValueError):
         _traffic_spec(fault_mode="dropout").validated()
-    with pytest.raises(ValueError):
-        _traffic_spec(checkpoint_every=2,
-                      checkpoint_dir="/tmp/x").validated()
+    # traffic checkpointing is supported (the plane's host state rides
+    # the Session snapshot) — and still refuses to stack
+    ck = _traffic_spec(checkpoint_every=3, checkpoint_dir="/tmp/x")
+    assert ck.validated().grid_key() is None
     with pytest.raises(ValueError):
         _traffic_spec(n_clients=65).validated()
     with pytest.raises(ValueError):
@@ -297,3 +298,79 @@ def test_dummy_pool_is_nonempty_and_store_guard():
     sess = Session(_traffic_spec(rounds=3))
     with pytest.raises(ValueError):
         sess.sim.store.set_pool(0, np.asarray([], np.int64))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume: the plane's host state rides the Session snapshot
+# ---------------------------------------------------------------------------
+
+def _assert_result_bitwise(a, b):
+    assert a.rounds == b.rounds
+    assert a.clock == b.clock                    # float lists, exact
+    assert a.train_loss == b.train_loss
+    assert a.test_loss == b.test_loss
+    assert a.test_acc == b.test_acc
+
+
+def test_traffic_checkpointed_run_and_resume_are_bitwise(tmp_path):
+    """The §14 + §12 composition: a checkpointed traffic run must be
+    bitwise the uninterrupted run (snapshot boundaries segment the scan
+    without touching the event walk), and `Session.resume` from a
+    mid-run snapshot must continue it bitwise — which requires the
+    snapshot to round-trip the event heap (with insertion counter), the
+    per-slot session state, the store's pool bindings, and the
+    population's RNG/arrival cursor."""
+    d = str(tmp_path / "snaps")
+    ref = Session(_traffic_spec()).run()
+
+    spec_ck = _traffic_spec(checkpoint_every=3, checkpoint_dir=d)
+    res_ck = Session(spec_ck).run()
+    _assert_result_bitwise(res_ck, ref)
+
+    resumed = Session.resume(spec_ck, step=3)
+    assert resumed.plane.clock > 0               # restored, not fresh
+    res_res = resumed.run()
+    _assert_result_bitwise(res_res, ref)
+
+
+def test_traffic_resume_replays_event_log_exactly(tmp_path):
+    d = str(tmp_path / "snaps")
+    sess_ref = Session(_traffic_spec())
+    sess_ref.run()
+    spec_ck = _traffic_spec(checkpoint_every=3, checkpoint_dir=d)
+    Session(spec_ck).run()
+    resumed = Session.resume(spec_ck, step=3)
+    resumed.run()
+    ref, res = sess_ref.plane.log, resumed.plane.log
+    assert ref.time == res.time
+    assert ref.kind == res.kind
+    assert ref.slot == res.slot
+    assert ref.user == res.user
+
+
+def test_plane_state_roundtrip_is_lossless():
+    """`TrafficPlane.state` -> fresh plane -> `restore` reproduces every
+    host field the event walk reads, including heap tie-break order."""
+    sess = Session(_traffic_spec(rounds=3, eval_every=3))
+    sess.run()
+    plane, sim = sess.plane, sess.sim
+    arrays, meta = plane.state(sim.store)
+
+    sess2 = Session(_traffic_spec(rounds=3, eval_every=3))
+    plane2 = sess2.plane
+    plane2.restore(sess2.sim, arrays, meta)
+    assert plane2.clock == plane.clock
+    assert plane2.queue._n == plane.queue._n
+    assert sorted(plane2.queue._heap) == sorted(plane.queue._heap)
+    np.testing.assert_array_equal(plane2.live, plane.live)
+    np.testing.assert_array_equal(plane2.user, plane.user)
+    np.testing.assert_array_equal(plane2.t_done, plane.t_done)
+    assert plane2.pop.rng.bit_generator.state == \
+        plane.pop.rng.bit_generator.state
+    assert plane2.pop._t_next == plane.pop._t_next
+    assert plane2.log.time == plane.log.time
+    for a, b in zip(sess2.sim.store.client_indices,
+                    sim.store.client_indices):
+        np.testing.assert_array_equal(a, b)
+    assert [p is None for p in plane2.base_profile] == \
+        [p is None for p in plane.base_profile]
